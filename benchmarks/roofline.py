@@ -1,0 +1,169 @@
+"""Roofline builder — turns dry-run artifacts into the §Roofline table.
+
+Three terms per (arch × shape × mesh), in seconds (v5e constants):
+
+  compute    = FLOPs_analytic            / (chips · 197e12 FLOP/s)
+  memory     = bytes_analytic            / (chips · 819e9 B/s)
+  collective = wire_bytes_per_device     / (50e9 B/s per ICI link)
+
+FLOPs/bytes use analytic per-architecture formulas (documented below and
+cross-checked against compiled cost_analysis): XLA's cost analysis counts
+`while` bodies ONCE (verified on this toolchain), so raw numbers
+undercount scanned layers by ~n_layers×; the HLO-parsed collective bytes
+ARE loop-corrected via recovered trip counts (launch/hlo_analysis.py).
+Both raw and corrected values are kept in the artifacts for audit.
+
+MODEL_FLOPS (the "useful" floor) = 6·N·tokens (dense) / 6·N_active·tokens
+(MoE); the compute term additionally carries the quadratic attention term
+where applicable — their ratio exposes remat/attention overhead.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # per chip
+LINK_BW = 50e9             # per ICI link
+
+ARTIFACT_DIR = "artifacts/dryrun"
+
+
+def _arch_cfg(name):
+    from repro.configs import get_config
+
+    return get_config(name)
+
+
+def analytic_costs(rec: dict) -> dict:
+    """Analytic FLOPs and HBM bytes for the whole step (all chips)."""
+    cfg = _arch_cfg(rec["arch"])
+    b, t = rec["global_batch"], rec["seq_len"]
+    n_active = cfg.n_active_params()
+    n_total = cfg.n_params()
+    L, hq, hd = cfg.n_layers, cfg.n_heads, cfg.hd
+    win = cfg.sliding_window
+
+    if rec["kind"] == "train":
+        tokens = b * t
+        model_flops = 6 * n_active * tokens
+        # attention logits+value matmuls, fwd+bwd (x3 of fwd 4·T·Teff·H·hd)
+        teff = t / 2 if win is None else min(win, t)
+        attn = 12 * L * hq * hd * t * teff * b
+        if cfg.is_encdec:
+            attn *= 2  # encoder + cross attention, coarse
+        if cfg.family == "ssm":
+            attn = 0
+        flops = model_flops + attn
+        # bytes: params read fwd+bwd + grads w + opt (m,v rw, p rw f32) +
+        # activations (residual stream rw per layer, bf16)
+        pbytes = n_total * 2
+        opt_bytes = n_total * 4 * 6
+        act = L * tokens * cfg.d_model * 2 * 4
+        bytes_ = 3 * pbytes + opt_bytes + act
+    elif rec["kind"] == "prefill":
+        tokens = b * t
+        model_flops = 2 * n_active * tokens
+        teff = t / 2 if win is None else min(win, t)
+        attn = 4 * L * hq * hd * t * teff * b
+        if cfg.family == "ssm":
+            attn = 0
+        flops = model_flops + attn
+        bytes_ = n_total * 2 + L * tokens * cfg.d_model * 2 * 2
+    else:  # decode: one token against a cache of length t
+        model_flops = 2 * n_active * b
+        s_eff = t if win is None else min(win, t)
+        attn = 4 * L * hq * hd * s_eff * b
+        cache_bytes = (2 * L * cfg.n_kv_heads * hd * s_eff * b * 2)
+        if cfg.family == "ssm":
+            attn = 0
+            cache_bytes = L * (cfg.d_model // hd) * hd * hd * 4 * b
+        if cfg.family == "hybrid":
+            # 3 global layers full cache, rest windowed + SSM state
+            glob_l = len(cfg.global_layers)
+            cache_bytes = 2 * b * cfg.n_kv_heads * hd * 2 * (
+                glob_l * t + (L - glob_l) * min(win or t, t))
+            nh = cfg.ssm.n_heads or cfg.d_model // cfg.ssm.head_dim
+            cache_bytes += L * b * nh * cfg.ssm.head_dim * \
+                cfg.ssm.state_dim * 4
+        flops = model_flops + attn
+        # params + cache read once per decode step
+        bytes_ = n_total * 2 + cache_bytes
+        model_flops = model_flops  # per-token useful work
+    return {
+        "flops_analytic": float(flops),
+        "bytes_analytic": float(bytes_),
+        "model_flops": float(6 * n_active * b * t if rec["kind"] == "train"
+                             else (2 * n_active * b * t
+                                   if rec["kind"] == "prefill"
+                                   else 2 * n_active * b)),
+    }
+
+
+def roofline_row(rec: dict) -> dict:
+    chips = 512 if rec["mesh"] == "multi" else 256
+    an = analytic_costs(rec)
+    t_compute = an["flops_analytic"] / (chips * PEAK_FLOPS)
+    t_memory = an["bytes_analytic"] / (chips * HBM_BW)
+    wire = rec["collectives"]["total_wire_bytes"]  # per-device already
+    t_coll = wire / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    useful = an["model_flops"] / (chips * PEAK_FLOPS)
+    row = {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops": an["model_flops"],
+        "flops_analytic": an["flops_analytic"],
+        "hlo_flops_raw": rec["cost_analysis"]["flops"],
+        "max_loop_multiplier": rec.get("max_loop_multiplier", 1),
+        "roofline_fraction": useful / bound if bound > 0 else 0.0,
+        "useful_vs_analytic": (an["model_flops"] / an["flops_analytic"]
+                               if an["flops_analytic"] else 0.0),
+        "temp_gib": rec["memory"]["temp_bytes"] / 2**30,
+        "args_gib": rec["memory"]["argument_bytes"] / 2**30,
+    }
+    return row
+
+
+def build_table(artifact_dir: str = ARTIFACT_DIR, mesh: str | None = None,
+                opt: bool = False):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(artifact_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if bool(rec.get("opt")) != opt:
+            continue
+        if rec.get("status") != "ok":
+            rows.append({"arch": rec.get("arch"), "shape": rec.get("shape"),
+                         "mesh": rec.get("mesh"),
+                         "status": rec.get("status"),
+                         "skip_reason": rec.get("skip_reason", "")})
+            continue
+        if mesh and rec["mesh"] != mesh:
+            continue
+        rows.append(roofline_row(rec) | {"status": "ok"})
+    return rows
+
+
+def main():
+    rows = build_table()
+    print("arch,shape,mesh,t_compute_s,t_memory_s,t_collective_s,dominant,"
+          "roofline_fraction,useful_vs_analytic,temp_gib")
+    for r in rows:
+        if r.get("status") != "ok":
+            print(f"{r.get('arch')},{r.get('shape')},{r.get('mesh')},"
+                  f"SKIP/{r.get('status')},{r.get('skip_reason', '')[:40]}")
+            continue
+        print(f"{r['arch']},{r['shape']},{r['mesh']},"
+              f"{r['t_compute_s']:.4g},{r['t_memory_s']:.4g},"
+              f"{r['t_collective_s']:.4g},{r['dominant']},"
+              f"{r['roofline_fraction']:.3f},{r['useful_vs_analytic']:.3f},"
+              f"{r['temp_gib']:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Benchmark harness — one entry per paper figure/table plus framework
+benches. Prints ``name,us_per_call,derived`` CSV lines.
+
+  fig2_axelrod   paper Fig. 2  (T vs s=F for n in 1..5, calibrated DES)
+  fig3_sir       paper Fig. 3  (T vs s=subset size)
+  kernels        per-kernel micro-benchmarks
+  serving        protocol-scheduled continuous batching vs sequential
+  roofline       summary of dry-run artifacts (if present)
+
+``python -m benchmarks.run``         — full run
+``python -m benchmarks.run --quick`` — CI-sized run
+``python -m benchmarks.run fig3``    — one section
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    only = None
+    for a in sys.argv[1:]:
+        if not a.startswith("-"):
+            only = a
+
+    def want(name):
+        return only is None or only == name
+
+    if want("fig2"):
+        print("# --- fig2_axelrod: name,s(F),n,T_mean_ms,T_sem_ms ---")
+        from benchmarks.fig2_axelrod import run as fig2
+
+        fig2(quick=quick)
+    if want("fig3"):
+        print("# --- fig3_sir: name,s,n,T_mean_ms,T_sem_ms ---")
+        from benchmarks.fig3_sir import run as fig3
+
+        fig3(quick=quick)
+    if want("kernels"):
+        print("# --- kernels: name,us_per_call,derived ---")
+        from benchmarks.kernels_bench import run_all as kb
+
+        kb()
+    if want("serving"):
+        print("# --- serving: name,us_per_token,derived ---")
+        from benchmarks.serving_bench import run as sb
+
+        sb(quick=quick)
+    if want("roofline"):
+        import glob
+        import os
+
+        if glob.glob(os.path.join("artifacts/dryrun", "*.json")):
+            print("# --- roofline (from dry-run artifacts) ---")
+            from benchmarks.roofline import main as rl
+
+            rl()
+        else:
+            print("# roofline: no artifacts/dryrun/*.json — run "
+                  "python -m repro.launch.dryrun --all first")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+"""Distributed MABS: the wavefront engine with the simulation state sharded
+over a device mesh — the full TPU execution story for the paper's protocol.
+
+Agents (the variable set V) are sharded over the 'data' axis; each wave's
+batched execution runs SPMD: gathers of interacting agents' rows become
+small collectives, the trait-update scatter stays local to the owning
+shard. The trajectory is asserted bit-identical to the single-device run —
+distribution, like wavefront scheduling itself, is semantics-free.
+
+Usage:  PYTHONPATH=src python examples/distributed_mabs.py
+"""
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import ProtocolConfig, run_wavefront
+from repro.mabs.axelrod import AxelrodConfig, AxelrodModel
+
+
+def main():
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((n_dev,), ("data",))
+    print(f"devices: {n_dev}")
+
+    model = AxelrodModel(AxelrodConfig(n_agents=1024, n_features=32, q=3))
+    cfg = ProtocolConfig(window=256, strict=True)
+
+    # single-device reference
+    state0 = model.init_state(jax.random.key(0))
+    ref, _ = run_wavefront(model, state0, 2_000, seed=1, config=cfg)
+
+    # sharded run: traits [N, F] split over agents
+    sharded0 = jax.device_put(
+        state0, {"traits": NamedSharding(mesh, P("data", None))})
+    with mesh:
+        out, stats = run_wavefront(model, sharded0, 2_000, seed=1,
+                                   config=cfg)
+    same = bool(jnp.all(out["traits"] == ref["traits"]))
+    shards = len(out["traits"].sharding.device_set)
+    print(f"state sharded over {shards} devices; "
+          f"mean wave parallelism {stats['mean_parallelism']:.1f}")
+    print(f"bit-identical to single-device trajectory: {same}")
+    assert same
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

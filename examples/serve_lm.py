@@ -1,0 +1,48 @@
+"""LLM serving demo: the paper's protocol as a continuous-batching
+scheduler (DESIGN.md §4). Requests arrive mid-flight; chunked prefill
+keeps long prompts from blocking decode waves.
+
+Usage:  PYTHONPATH=src python examples/serve_lm.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.models.api import build_model
+from repro.serving.engine import Request, ServingEngine
+
+
+def main():
+    cfg = ARCHS["smollm-360m"].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    engine = ServingEngine(model, params, n_slots=3, max_len=96,
+                           prefill_chunk=8)
+
+    rng = np.random.RandomState(0)
+    for i, plen in enumerate([6, 40, 9]):       # one long "straggler"
+        engine.submit(Request(
+            rid=i, prompt=rng.randint(0, cfg.vocab, plen).astype(np.int32),
+            max_new_tokens=8))
+
+    # run a few protocol iterations, then a request arrives mid-flight
+    for _ in range(4):
+        engine.step()
+    print("mid-flight arrival of request 3 ...")
+    engine.submit(Request(
+        rid=3, prompt=rng.randint(0, cfg.vocab, 5).astype(np.int32),
+        max_new_tokens=8))
+    engine.run()
+
+    print(f"protocol iterations: {engine.iterations}, "
+          f"wave sizes: {engine.wave_sizes}")
+    for r in sorted(engine.finished, key=lambda r: r.rid):
+        print(f"  req {r.rid} (prompt {len(r.prompt):2d} tok) "
+              f"-> {r.out_tokens}")
+    order = [r.rid for r in engine.finished]
+    print(f"completion order: {order} "
+          f"(the 40-token straggler did not block the short requests)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.configs.base import ArchConfig, MoESpec, SSMSpec
+from repro.configs.registry import ARCHS, get_config
+from repro.configs.shapes import SHAPES, ShapeSpec, applicable, reduced_shape
+
+__all__ = ["ArchConfig", "MoESpec", "SSMSpec", "ARCHS", "get_config",
+           "SHAPES", "ShapeSpec", "applicable", "reduced_shape"]

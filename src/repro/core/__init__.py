@@ -1,0 +1,43 @@
+"""Core of the reproduction: the paper's adaptive-parallelization protocol.
+
+  model.py      — recipe/record model interface (paper §3.5)
+  records.py    — vectorized worker records: prefix-conflict matrices
+  wavefront.py  — SPMD wavefront engine (TPU-native adaptation)
+  chain.py      — bidirectional task chain (paper §3.3)
+  workersim.py  — paper-faithful n-worker discrete-event simulator
+  protocol.py   — high-level API
+"""
+from repro.core.model import MABSModel
+from repro.core.protocol import (
+    ProtocolConfig,
+    run_oracle,
+    run_wavefront,
+    simulate_protocol,
+)
+from repro.core.records import (
+    critical_path_length,
+    prefix_conflicts,
+    wave_levels,
+    wave_levels_capped,
+)
+from repro.core.wavefront import WavefrontRunner, execute_window, run_sequential
+from repro.core.workersim import DESCosts, DESModel, DESResult, ProtocolSimulator
+
+__all__ = [
+    "MABSModel",
+    "ProtocolConfig",
+    "run_oracle",
+    "run_wavefront",
+    "simulate_protocol",
+    "prefix_conflicts",
+    "wave_levels",
+    "wave_levels_capped",
+    "critical_path_length",
+    "WavefrontRunner",
+    "execute_window",
+    "run_sequential",
+    "DESCosts",
+    "DESModel",
+    "DESResult",
+    "ProtocolSimulator",
+]

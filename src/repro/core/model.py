@@ -1,0 +1,92 @@
+"""Model interface for the adaptive-parallelization protocol.
+
+Mirrors the paper's two model-side concepts:
+
+  * ``recipe``  — the information a task holds after its *creation* part
+                  (paper §3.5). Here: a pytree of arrays with a leading
+                  window dimension W (structure-of-arrays).
+  * ``record``  — the worker-side dependence test (paper §3.5). Here: a
+                  vectorized pairwise ``conflicts`` predicate from which the
+                  prefix-conflict matrix is built (core/records.py).
+
+Creation/execution depth split (paper §3.4): ``create_tasks`` performs the
+creation part (including drawing any randomness, bound to the task's global
+chain index — see utils/prng.py) and returns recipes; ``execute_wave``
+performs the execution part for a whole *wave* of commuting tasks at once.
+
+Two conflict rules are exposed:
+
+  * ``strict=True``  (default) — full dependence closure: flow (RAW) +
+    anti (WAR) + output (WAW) hazards. Guarantees bit-exact equivalence
+    with sequential execution (property-tested).
+  * ``strict=False`` — the rule exactly as stated in the paper, which
+    covers flow+output hazards but omits anti-dependences (see DESIGN.md
+    §10: for Axelrod the paper's record rule misses ``tgt_i == src_j``).
+    Provided for fidelity experiments; tests demonstrate the divergence.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Any
+
+import jax
+
+Recipes = Any  # pytree of arrays with leading dim W
+State = Any  # pytree of arrays
+
+
+class MABSModel(abc.ABC):
+    """A multi-agent simulation expressible as a chain of localized tasks."""
+
+    #: name used in benchmarks / registries
+    name: str = "mabs"
+
+    @abc.abstractmethod
+    def init_state(self, rng: jax.Array) -> State:
+        """Initial simulation state (does not count toward measured T)."""
+
+    @abc.abstractmethod
+    def create_tasks(self, base_key: jax.Array, start_index: int, count: int) -> Recipes:
+        """Creation part for tasks [start_index, start_index+count).
+
+        Must be a pure function of (base_key, global task index) so that
+        scheduling cannot influence the realized randomness.
+        """
+
+    @abc.abstractmethod
+    def conflicts(self, a: Recipes, b: Recipes, *, strict: bool = True) -> jax.Array:
+        """Pairwise predicate: does later task ``a`` conflict with earlier
+        task ``b``? Broadcasts: a has shape [...,1]-style leading dims vs b.
+        Used by records.prefix_conflicts to build the W×W matrix.
+        """
+
+    @abc.abstractmethod
+    def execute_wave(self, state: State, recipes: Recipes, mask: jax.Array) -> State:
+        """Execution part for all tasks where mask[i]; must be correct for
+        any conflict-free subset (the scheduler guarantees the mask is one).
+        """
+
+    def execute_sequential(self, state: State, recipes: Recipes, count: int) -> State:
+        """Oracle: execute tasks one by one in chain order. Default
+        implementation runs execute_wave with one-hot masks; models may
+        override with a faster scan."""
+        import jax.numpy as jnp
+
+        n = jax.tree_util.tree_leaves(recipes)[0].shape[0]
+
+        def body(i, st):
+            mask = (jnp.arange(n) == i) & (i < count)
+            return self.execute_wave(st, recipes, mask)
+
+        return jax.lax.fori_loop(0, count, body, state)
+
+    # ---- cost model hooks for the discrete-event protocol simulator ----
+
+    def task_cost(self, recipes: Recipes, index: int) -> float:
+        """Predicted execution cost (seconds) of one task — calibrated by
+        benchmarks; used by core/workersim.py. Default: uniform unit cost."""
+        return 1.0
+
+    def creation_cost(self) -> float:
+        """Predicted cost of the creation part of one task."""
+        return 0.05

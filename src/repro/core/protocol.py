@@ -1,0 +1,57 @@
+"""High-level protocol API — binds a MABS model to an execution engine.
+
+Three engines over the same model:
+
+  * ``run_wavefront``  — SPMD wavefront engine (production path; TPU target).
+  * ``run_sequential`` — chain-order oracle (correctness reference).
+  * ``simulate_protocol`` — paper-faithful discrete-event simulation of the
+    n-worker shared-memory workflow (reproduces the paper's T(s, n) figures).
+
+The paper's "choices in applying the protocol" (§3.4) map to:
+  chain granularity  -> the model's task definition (e.g. agents per subset)
+  task depth         -> what create_tasks precomputes (ids + PRNG binding)
+  workflow params    -> n_workers, C (DES); window size (wavefront engine)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+from repro.core.wavefront import WavefrontRunner, run_sequential
+from repro.core.workersim import DESCosts, DESModel, ProtocolSimulator
+
+
+@dataclass
+class ProtocolConfig:
+    window: int = 256          # recipe-window size (wavefront engine)
+    n_workers: int = 4         # n  (DES engine)
+    tasks_per_cycle: int = 6   # C  (DES engine; paper keeps C=6)
+    strict: bool = True        # full hazard closure vs paper's record rule
+
+
+def run_wavefront(model, state, total_tasks: int, *, seed: int = 0,
+                  config: ProtocolConfig | None = None):
+    cfg = config or ProtocolConfig()
+    runner = WavefrontRunner(model, window=cfg.window, strict=cfg.strict)
+    return runner.run(state, total_tasks, seed=seed)
+
+
+def run_oracle(model, state, total_tasks: int, *, seed: int = 0,
+               config: ProtocolConfig | None = None):
+    cfg = config or ProtocolConfig()
+    return run_sequential(model, state, total_tasks, seed=seed,
+                          window=cfg.window)
+
+
+def simulate_protocol(des_model: DESModel, total_tasks: int, *,
+                      config: ProtocolConfig | None = None,
+                      costs: DESCosts | None = None):
+    cfg = config or ProtocolConfig()
+    sim = ProtocolSimulator(
+        des_model,
+        n_workers=cfg.n_workers,
+        total_tasks=total_tasks,
+        tasks_per_cycle=cfg.tasks_per_cycle,
+        costs=costs,
+    )
+    return sim.run()

@@ -1,0 +1,15 @@
+from repro.distributed.sharding import (
+    batch_pspec,
+    param_pspec,
+    params_shardings,
+    states_shardings,
+    zero1_pspec,
+)
+
+__all__ = [
+    "param_pspec",
+    "params_shardings",
+    "batch_pspec",
+    "states_shardings",
+    "zero1_pspec",
+]

@@ -1,0 +1,30 @@
+"""Ambient mesh context — lets model code (shard_map layers) find the mesh
+the launcher built without threading it through every config."""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Optional
+
+from jax.sharding import Mesh
+
+_MESH: Optional[Mesh] = None
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _MESH
+
+
+@contextmanager
+def mesh_context(mesh: Mesh):
+    prev = get_mesh()
+    set_mesh(mesh)
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        set_mesh(prev)

@@ -1,0 +1,269 @@
+"""Logical-axis sharding rules for the production mesh.
+
+Mesh axes: ("pod", "data", "model") multi-pod or ("data", "model") single
+pod. Policy (DESIGN.md §8):
+
+  * batch                      -> (pod, data)          [DP]
+  * attention heads / kv heads -> model                [TP] when divisible
+  * MLP hidden, vocab          -> model                [TP] when divisible
+  * experts                    -> model                [EP]
+  * optimizer moments          -> param spec + data axis on the largest
+                                  still-replicated dim [ZeRO-1]
+
+Head-structured weights are stored flattened ([D, H·hd]); sharding them
+only makes sense on whole-head boundaries, so the rules consult the config
+(n_heads % model_size) rather than the raw dim size. Anything that does not
+divide cleanly is replicated — divergences show up in the roofline table
+rather than as GSPMD surprises.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.utils.pytree import tree_map_with_path_str
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def data_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def data_size(mesh: Mesh) -> int:
+    return int(np.prod([_axis_size(mesh, a) for a in data_axes(mesh)]))
+
+
+def _divisible(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def param_pspec(path: str, leaf, cfg, mesh: Mesh) -> P:
+    """PartitionSpec for one parameter leaf (path: '/'-joined names;
+    stacked-layer leading dims are auto-detected from rank)."""
+    model = _axis_size(mesh, "model")
+    shape = leaf.shape
+
+    def heads_ok(n):
+        return _divisible(n, model)
+
+    if getattr(cfg, "layout", "tp") == "dp":
+        # pure-DP layout: params replicated; the model axis carries extra
+        # batch shards instead of TP (§Perf — rwkv6 hillclimb)
+        return P(*([None] * len(shape)))
+
+    spec: list = [None] * len(shape)
+
+    def set_last(ax):
+        spec[-1] = ax
+
+    def set_first_matrix_dim(ax):
+        # first *matrix* dim = -2 for rank>=2 leaves
+        if len(shape) >= 2:
+            spec[-2] = ax
+
+    if re.search(r"embed/table$", path):
+        if _divisible(cfg.vocab, model):
+            spec[-2] = "model"                      # vocab-parallel rows
+    elif re.search(r"lm_head/w$", path):
+        if _divisible(cfg.vocab, model):
+            set_last("model")
+    elif re.search(r"experts/(w_gate|w_up)$", path):
+        # [.., E, D, Fe] — 2-D expert sharding: experts over the data axes
+        # (FSDP-style ownership; grads reduce-scatter automatically). This
+        # is what lets 480B-class MoEs fit 16 GiB chips (DESIGN.md §8).
+        # The TP dim differs per impl: shard_map contracts over D (ships
+        # D-slices through the a2a), dense shards the expert hidden Fe.
+        daxes = data_axes(mesh)
+        if daxes and _divisible(cfg.moe.n_experts, data_size(mesh)):
+            spec[-3] = daxes if len(daxes) > 1 else daxes[0]
+        elif _divisible(cfg.moe.n_experts, model):
+            spec[-3] = "model"
+        if spec[-3] != "model":
+            if getattr(cfg, "moe_impl", "dense").startswith("shard_map"):
+                if _divisible(cfg.d_model, model):
+                    spec[-2] = "model"
+            elif _divisible(cfg.moe.d_expert, model):
+                spec[-1] = "model"
+    elif re.search(r"experts/w_out$", path):
+        daxes = data_axes(mesh)
+        if daxes and _divisible(cfg.moe.n_experts, data_size(mesh)):
+            spec[-3] = daxes if len(daxes) > 1 else daxes[0]
+        elif _divisible(cfg.moe.n_experts, model):
+            spec[-3] = "model"
+        if spec[-3] != "model":
+            if getattr(cfg, "moe_impl", "dense").startswith("shard_map"):
+                if _divisible(cfg.d_model, model):
+                    spec[-1] = "model"
+            elif _divisible(cfg.moe.d_expert, model):
+                spec[-2] = "model"
+    elif re.search(r"(attn|xattn)/wq/w$", path):
+        if heads_ok(cfg.n_heads):
+            set_last("model")
+    elif re.search(r"(attn|xattn)/w[kv]/w$", path):
+        if heads_ok(cfg.n_kv_heads):
+            set_last("model")
+    elif re.search(r"(attn|xattn)/wo/w$", path):
+        if heads_ok(cfg.n_heads):
+            set_first_matrix_dim("model")
+    elif re.search(r"(attn|xattn)/wq/b$", path):
+        if heads_ok(cfg.n_heads):
+            set_last("model")
+    elif re.search(r"(attn|xattn)/w[kv]/b$", path):
+        if heads_ok(cfg.n_kv_heads):
+            set_last("model")
+    elif re.search(r"(mlp|dense_mlp)/(w_gate|w_up)/w$", path):
+        if _divisible(cfg.d_ff, model):
+            set_last("model")
+    elif re.search(r"(mlp|dense_mlp)/w_out/w$", path):
+        if _divisible(cfg.d_ff, model):
+            set_first_matrix_dim("model")
+    elif re.search(r"rwkv/tm/w[rkvg]/w$", path):
+        if _divisible(cfg.d_model, model) and heads_ok(
+                cfg.d_model // cfg.hd):
+            set_last("model")
+    elif re.search(r"rwkv/tm/wo/w$", path):
+        if _divisible(cfg.d_model, model) and heads_ok(
+                cfg.d_model // cfg.hd):
+            set_first_matrix_dim("model")
+    elif re.search(r"rwkv/cm/wk/w$", path):
+        if _divisible(cfg.d_ff, model):
+            set_last("model")
+    elif re.search(r"rwkv/cm/wv/w$", path):
+        if _divisible(cfg.d_ff, model):
+            set_first_matrix_dim("model")
+    elif re.search(r"ssm/(w_x|w_z|w_b|w_c|w_dt)/w$", path) and cfg.ssm:
+        nh = cfg.ssm.n_heads or cfg.d_model // cfg.ssm.head_dim
+        if heads_ok(nh):
+            set_last("model")
+    elif re.search(r"ssm/w_out/w$", path) and cfg.ssm:
+        nh = cfg.ssm.n_heads or cfg.d_model // cfg.ssm.head_dim
+        if heads_ok(nh):
+            set_first_matrix_dim("model")
+    # everything else (norms, mus, router, biases, prefix): replicated
+    return P(*spec)
+
+
+def params_shardings(params_shapes: Any, cfg, mesh: Mesh):
+    """Pytree of NamedSharding matching a pytree of arrays/SDS."""
+    return tree_map_with_path_str(
+        lambda path, leaf: NamedSharding(
+            mesh, param_pspec(path, leaf, cfg, mesh)),
+        params_shapes)
+
+
+def zero1_pspec(path: str, leaf, cfg, mesh: Mesh) -> P:
+    """Optimizer-moment spec: the param spec plus 'data' on the largest
+    still-unsharded, divisible dim (ZeRO-1 state partitioning)."""
+    base = param_pspec(path, leaf, cfg, mesh)
+    spec = list(base) + [None] * (len(leaf.shape) - len(base))
+    daxes = data_axes(mesh)
+    if getattr(cfg, "layout", "tp") == "dp" and "model" in mesh.axis_names:
+        daxes = daxes + ("model",)   # ZeRO over every axis in pure-DP
+    dsize = int(np.prod([_axis_size(mesh, a) for a in daxes])) if daxes else 1
+    if dsize <= 1 or not daxes:
+        return P(*spec)
+    # already consuming a data axis (e.g. 2-D-sharded experts)? done.
+    used = set()
+    for s in spec:
+        for a in (s if isinstance(s, tuple) else (s,)):
+            used.add(a)
+    if any(a in used for a in daxes):
+        return P(*spec)
+    # pick the largest unsharded dim divisible by the data size
+    cand = [(dim, i) for i, dim in enumerate(leaf.shape)
+            if spec[i] is None and dim % dsize == 0]
+    if cand:
+        _, i = max(cand)
+        spec[i] = daxes if len(daxes) > 1 else daxes[0]
+    return P(*spec)
+
+
+def opt_state_shardings(params_shapes: Any, cfg, mesh: Mesh):
+    return tree_map_with_path_str(
+        lambda path, leaf: NamedSharding(
+            mesh, zero1_pspec(path, leaf, cfg, mesh)),
+        params_shapes)
+
+
+def batch_pspec(mesh: Mesh, leaf_shape, *, batch_size: int,
+                layout: str = "tp") -> P:
+    """Batch inputs: leading dim over (pod, data); the "dp" layout also
+    folds the model axis into the batch (pure data parallelism)."""
+    candidates = [data_axes(mesh)]
+    if layout == "dp" and "model" in mesh.axis_names:
+        candidates.insert(0, data_axes(mesh) + ("model",))
+    for daxes in candidates:
+        dsize = (int(np.prod([_axis_size(mesh, a) for a in daxes]))
+                 if daxes else 1)
+        if daxes and batch_size % dsize == 0:
+            first = daxes if len(daxes) > 1 else daxes[0]
+            return P(first, *([None] * (len(leaf_shape) - 1)))
+    return P(*([None] * len(leaf_shape)))
+
+
+def batch_shardings(batch_specs: Any, mesh: Mesh, *, layout: str = "tp"):
+    def f(leaf):
+        b = leaf.shape[0] if leaf.shape else 1
+        return NamedSharding(mesh, batch_pspec(mesh, leaf.shape,
+                                               batch_size=b, layout=layout))
+
+    return jax.tree_util.tree_map(f, batch_specs)
+
+
+def states_shardings(states_shapes: Any, cfg, mesh: Mesh, *,
+                     global_batch: int):
+    """Decode/serving state shardings: KV caches [L, B, Hkv, S, hd] get
+    batch->data and kv_heads->model (whole heads only); SSM states
+    [L, B, H, P, N] get batch->data, heads->model; scalars replicated."""
+    model = _axis_size(mesh, "model")
+    daxes = data_axes(mesh)
+    dsize = data_size(mesh)
+    batch_ax = (daxes if len(daxes) > 1 else daxes[0]) if daxes else None
+    shard_batch = batch_ax is not None and global_batch % dsize == 0
+
+    def f(path: str, leaf):
+        spec: list = [None] * len(leaf.shape)
+        if re.search(r"kv/(k|v)$", path) and len(leaf.shape) == 5:
+            if shard_batch:
+                spec[1] = batch_ax
+            if _divisible(cfg.n_kv_heads, model):
+                spec[2] = "model"
+            elif getattr(cfg, "seq_shard_cache", False) \
+                    and _divisible(leaf.shape[3], model):
+                # flash-decode style: when kv heads can't split, shard the
+                # sequence dim; softmax partials combine via small psums
+                spec[3] = "model"
+        elif re.search(r"kv/(kpos|length)$", path):
+            if shard_batch and len(leaf.shape) >= 2:
+                spec[1] = batch_ax
+        elif path == "pos" and len(leaf.shape) == 1:
+            if shard_batch:
+                spec[0] = batch_ax
+        elif re.search(r"/ssm$", path) and len(leaf.shape) == 5:
+            nh = cfg.ssm.n_heads or cfg.d_model // cfg.ssm.head_dim
+            if shard_batch:
+                spec[1] = batch_ax
+            if _divisible(nh, model):
+                spec[2] = "model"
+        elif re.search(r"tm/s$", path) and len(leaf.shape) == 5:
+            nh = cfg.d_model // cfg.hd
+            if shard_batch:
+                spec[1] = batch_ax
+            if _divisible(nh, model):
+                spec[2] = "model"
+        elif re.search(r"(tm|cm)/last$", path) and len(leaf.shape) == 4:
+            if shard_batch:
+                spec[1] = batch_ax
+        elif re.search(r"enc_out$", path) and len(leaf.shape) == 3:
+            if shard_batch:
+                spec[0] = batch_ax
+        return NamedSharding(mesh, P(*spec))
+
+    return tree_map_with_path_str(f, states_shapes)

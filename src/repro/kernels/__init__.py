@@ -1,0 +1,28 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+Each subpackage ships three files:
+  <name>.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (interpret=True fallback on CPU)
+  ref.py    — pure-jnp oracle used by the allclose test sweeps
+
+Kernels:
+  conflict — W×W prefix-conflict bitmask over task id-footprints (the
+             protocol's O(W²) record check, paper §3.5)
+  axelrod  — one wave of pairwise cultural interactions (paper §4.1)
+  sir      — one wave of ring-graph SIRS subset updates (paper §4.2)
+  wkv6     — RWKV6 data-dependent-decay time-mix (chunked recurrence)
+  flash    — fused attention (causal / sliding-window), online softmax
+"""
+
+ON_TPU = False
+try:  # pragma: no cover - resolved at import time
+    import jax
+
+    ON_TPU = jax.default_backend() == "tpu"
+except Exception:  # pragma: no cover
+    pass
+
+
+def interpret_default() -> bool:
+    """pallas interpret mode: Python interpreter on CPU, compiled on TPU."""
+    return not ON_TPU

@@ -1,0 +1,3 @@
+from repro.kernels.axelrod.ops import axelrod_wave
+
+__all__ = ["axelrod_wave"]

@@ -1,0 +1,38 @@
+"""Public wrapper for the Axelrod wave kernel (gather/scatter outside)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import interpret_default
+from repro.kernels.axelrod.axelrod import axelrod_wave_pallas
+
+
+def _pad_features(x, fp):
+    f = x.shape[1]
+    if f == fp:
+        return x
+    pad = [(0, 0), (0, fp - f)]
+    return jnp.pad(x, pad)
+
+
+def axelrod_wave(s_tr, t_tr, u, gumbel, mask, *, omega: float,
+                 interpret: bool | None = None):
+    """Kernel-backed wave interaction. Returns (new_t [W, F], interact [W]).
+
+    Accepts unpadded [W, F]; pads the feature axis to a lane multiple of 128
+    for the TPU layout and crops on return.
+    """
+    interp = interpret_default() if interpret is None else interpret
+    w, f = s_tr.shape
+    fp = max(128, -(-f // 128) * 128)
+    new_t, inter = axelrod_wave_pallas(
+        _pad_features(s_tr.astype(jnp.int32), fp),
+        _pad_features(t_tr.astype(jnp.int32), fp),
+        u.astype(jnp.float32),
+        _pad_features(gumbel.astype(jnp.float32), fp),
+        mask,
+        omega=omega,
+        n_features=f,
+        interpret=interp,
+    )
+    return new_t[:, :f], inter[:, 0].astype(bool)

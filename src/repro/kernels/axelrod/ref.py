@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the Axelrod wave-interaction kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def axelrod_wave_ref(s_tr, t_tr, u, gumbel, mask, *, omega: float,
+                     n_features: int):
+    """One wave of pairwise interactions.
+
+    s_tr, t_tr: [W, Fp] int32 (source / target traits, Fp >= n_features,
+    padding columns ignored); u: [W] f32; gumbel: [W, Fp] f32; mask [W] bool.
+    Returns (new_t [W, Fp] int32, interact [W] bool).
+    """
+    fp = s_tr.shape[1]
+    valid_f = jnp.arange(fp) < n_features
+
+    eq = (s_tr == t_tr) & valid_f
+    overlap = jnp.sum(eq, axis=-1).astype(jnp.float32) / n_features
+
+    interact = (
+        mask & (u < overlap) & (overlap < 1.0) & (overlap >= 1.0 - omega)
+    )
+
+    scores = jnp.where((~eq) & valid_f, gumbel, -1.0)
+    feat = jnp.argmax(scores, axis=-1)                      # [W]
+
+    onehot = jnp.arange(fp)[None, :] == feat[:, None]
+    new_t = jnp.where(onehot & interact[:, None], s_tr, t_tr)
+    return new_t, interact

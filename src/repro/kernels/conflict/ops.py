@@ -1,0 +1,25 @@
+"""Public wrapper for the prefix-conflict kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import interpret_default
+from repro.kernels.conflict.conflict import conflict_matrix_pallas
+
+
+def conflict_matrix(read_ids, write_ids, valid, *, strict: bool = True,
+                    interpret: bool | None = None):
+    """Prefix-conflict matrix [W, W] (bool) from id footprints.
+
+    read_ids [W, nr] int32, write_ids [W, nw] int32; negative ids are unused
+    slots; valid [W] bool masks padded window entries.
+    """
+    interp = interpret_default() if interpret is None else interpret
+    out = conflict_matrix_pallas(
+        jnp.asarray(read_ids, jnp.int32),
+        jnp.asarray(write_ids, jnp.int32),
+        jnp.asarray(valid),
+        strict=strict,
+        interpret=interp,
+    )
+    return out.astype(bool)

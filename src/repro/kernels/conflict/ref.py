@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the prefix-conflict kernel.
+
+Footprint model: each task i declares read-ids R_i (shape [W, n_read]) and
+write-ids W_i (shape [W, n_write]); an id < 0 is "unused slot".
+Later task i conflicts with earlier task j (j < i) iff
+
+    (W_j ∩ R_i) ∪ (W_j ∩ W_i) ≠ ∅            (flow + output hazards)
+    ∪ (W_i ∩ R_j) ≠ ∅            when strict  (anti hazard)
+
+which instantiates the paper's Axelrod record rule with R=[src, tgt],
+W=[tgt] (and the strict closure of DESIGN.md §10).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _any_match(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """a: [W, na], b: [W, nb] -> [W, W] bool: rows i of a vs rows j of b."""
+    eq = a[:, None, :, None] == b[None, :, None, :]     # [W, W, na, nb]
+    used = (a[:, None, :, None] >= 0) & (b[None, :, None, :] >= 0)
+    return jnp.any(eq & used, axis=(-1, -2))
+
+
+def conflict_matrix_ref(read_ids, write_ids, valid, *, strict: bool = True):
+    """[W, W] bool, strictly lower-triangular prefix-conflict matrix."""
+    w = read_ids.shape[0]
+    raw = _any_match(read_ids, write_ids)       # W_j ∩ R_i  (i rows, j cols)
+    waw = _any_match(write_ids, write_ids)      # W_j ∩ W_i
+    conf = raw | waw
+    if strict:
+        war = _any_match(write_ids, read_ids)   # W_i ∩ R_j
+        conf = conf | war
+    lower = jnp.tril(jnp.ones((w, w), dtype=bool), k=-1)
+    return conf & lower & valid[:, None] & valid[None, :]

@@ -1,0 +1,31 @@
+"""Public wrapper for the fused attention kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import interpret_default
+from repro.kernels.flash.flash import flash_attention_pallas
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                    scale: float | None = None, interpret: bool | None = None,
+                    block_q: int = 128, block_k: int = 128):
+    """q [B, H, T, D]; k, v [B, Hkv, S, D] (GQA via H % Hkv == 0).
+
+    Sliding ``window`` w: query t attends keys (t-w, t]; requires causal.
+    Ends are aligned when S > T (chunked prefill semantics).
+    """
+    interp = interpret_default() if interpret is None else interpret
+    b, h, t, d = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    if scale is None:
+        scale = float(d) ** -0.5
+
+    qf = q.reshape(b * h, t, d)
+    kf = k.reshape(b * hkv, s, d)
+    vf = v.reshape(b * hkv, s, d)
+    o = flash_attention_pallas(
+        qf, kf, vf, causal=causal, window=window, scale=scale,
+        n_q_heads=h, n_kv_heads=hkv, interpret=interp,
+        block_q=block_q, block_k=block_k)
+    return o.reshape(b, h, t, d)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for fused attention (causal / sliding-window / full)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: int | None = None, scale: float | None = None):
+    """q [B, H, T, D]; k, v [B, Hkv, S, D] with H % Hkv == 0 (GQA).
+
+    window w: query t attends to keys in (t-w, t] (requires causal).
+    When S > T the query block is aligned to the *end* of the key axis
+    (chunked prefill / decode semantics).
+    Returns [B, H, T, D] in q's dtype; softmax accumulates in f32.
+    """
+    b, h, t, d = q.shape
+    hkv = k.shape[1]
+    group = h // hkv
+    if scale is None:
+        scale = d ** -0.5
+
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+
+    logits = jnp.einsum("bhtd,bhsd->bhts", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * scale
+    s = kk.shape[2]
+    qi = jnp.arange(t)[:, None] + (s - t)   # align ends (prefill/decode)
+    ki = jnp.arange(s)[None, :]
+    mask = jnp.ones((t, s), bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= ki > qi - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhts,bhsd->bhtd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.sir.ops import sir_wave
+
+__all__ = ["sir_wave"]

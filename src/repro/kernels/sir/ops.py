@@ -1,0 +1,41 @@
+"""Public wrapper for the SIR wave kernel (halo gather outside)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import interpret_default
+from repro.kernels.sir.sir import sir_wave_pallas
+
+
+def _pad_to(x, n):
+    if x.shape[1] == n:
+        return x
+    return jnp.pad(x, [(0, 0), (0, n - x.shape[1])])
+
+
+def sir_wave(states, subsets, u, *, n_agents: int, k: int, subset_size: int,
+             p_si: float, p_ir: float, p_rs: float,
+             interpret: bool | None = None):
+    """Kernel-backed type-A wave.
+
+    states [N] int — ring states; subsets [W] int32 — subset ids;
+    u [W, s] f32. Returns nxt [W, s] int32 next states per subset agent.
+    """
+    interp = interpret_default() if interpret is None else interpret
+    half = k // 2
+    s = subset_size
+
+    # halo slice per subset: contiguous on the ring
+    base = subsets[:, None] * s - half
+    idx = (base + jnp.arange(s + 2 * half)[None, :]) % n_agents
+    ext = states[idx].astype(jnp.int32)                     # [W, s+k]
+
+    ep = max(128, -(-(s + 2 * half) // 128) * 128)
+    up = max(128, -(-s // 128) * 128)
+    nxt = sir_wave_pallas(
+        _pad_to(ext, ep),
+        _pad_to(u.astype(jnp.float32), up),
+        k=k, subset_size=s, p_si=p_si, p_ir=p_ir, p_rs=p_rs,
+        interpret=interp,
+    )
+    return nxt[:, :s]

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the SIR subset-update kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+S, I, R = 0, 1, 2
+
+
+def sir_wave_ref(ext_states, u, *, k: int, subset_size: int,
+                 p_si: float, p_ir: float, p_rs: float):
+    """One wave of subset state-computations (the protocol's type-A tasks).
+
+    ext_states: [W, s + k(+pad)] int32 — the contiguous ring slice covering
+        each subset plus k/2 halo cells on each side (ops.py gathers it).
+    u: [W, s(+pad)] f32 — per-agent uniforms (bound at task creation).
+    Returns nxt [W, s] int32 — the agents' next states.
+    """
+    half = k // 2
+    s = subset_size
+    # infected-neighbour count via the 2·half static shifts of the halo row
+    acc = jnp.zeros(ext_states[:, :s].shape, jnp.float32)
+    for d in range(2 * half + 1):
+        if d == half:
+            continue  # skip self
+        acc = acc + (ext_states[:, d:d + s] == I).astype(jnp.float32)
+    inf_frac = acc / k
+
+    cur = ext_states[:, half:half + s]
+    uu = u[:, :s]
+    nxt = jnp.where(
+        (cur == S) & (uu < p_si * inf_frac), I,
+        jnp.where(
+            (cur == I) & (uu < p_ir), R,
+            jnp.where((cur == R) & (uu < p_rs), S, cur),
+        ),
+    )
+    return nxt.astype(jnp.int32)

@@ -1,0 +1,81 @@
+"""SIR subset-update Pallas kernel.
+
+One wave = up to W commuting type-A tasks, each updating one contiguous
+subset of s agents on the ring. Because the graph is a ring of constant
+degree k, the neighbourhood of a contiguous subset is a contiguous slice of
+length s + k — so the "gather" is a halo exchange, not a real gather, and
+inside the kernel the k neighbour reads become k static shifted slices of a
+VMEM-resident row (classic stencil pattern; this is the TPU-native rethink
+of the paper's per-agent neighbour iteration).
+
+Tiling: rows (tasks) in blocks of 8; the (padded) agent axis stays whole in
+VMEM: block = [8, sp + kp] ints ≤ 8·(1024+128)·4 B ≈ 36 KiB. The k shifted
+compares are VPU adds; there is no MXU work in this model.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_W = 8
+S, I, R = 0, 1, 2
+
+
+def _kernel(k: int, s: int, p_si: float, p_ir: float, p_rs: float,
+            ext_ref, u_ref, out_ref):
+    half = k // 2
+    ext = ext_ref[...]
+
+    acc = jnp.zeros((ext.shape[0], s), jnp.float32)
+    for d in range(2 * half + 1):
+        if d == half:
+            continue
+        acc = acc + (jax.lax.slice_in_dim(ext, d, d + s, axis=1) == I
+                     ).astype(jnp.float32)
+    inf_frac = acc / k
+
+    cur = jax.lax.slice_in_dim(ext, half, half + s, axis=1)
+    u = jax.lax.slice_in_dim(u_ref[...], 0, s, axis=1)
+
+    nxt = jnp.where(
+        (cur == S) & (u < p_si * inf_frac), I,
+        jnp.where(
+            (cur == I) & (u < p_ir), R,
+            jnp.where((cur == R) & (u < p_rs), S, cur),
+        ),
+    )
+    # write back into the padded output row
+    padded = jnp.zeros(out_ref.shape, jnp.int32)
+    padded = jax.lax.dynamic_update_slice(padded, nxt.astype(jnp.int32),
+                                          (0, 0))
+    out_ref[...] = padded
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "subset_size", "p_si", "p_ir", "p_rs",
+                     "interpret", "block"))
+def sir_wave_pallas(ext_states, u, *, k: int, subset_size: int, p_si: float,
+                    p_ir: float, p_rs: float, interpret: bool = True,
+                    block: int = BLOCK_W):
+    w, ep = ext_states.shape
+    up = u.shape[1]
+    b = min(block, w)
+    assert w % b == 0
+    grid = (w // b,)
+    row = lambda i: (i, 0)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, k, subset_size, p_si, p_ir, p_rs),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, ep), row),
+            pl.BlockSpec((b, up), row),
+        ],
+        out_specs=pl.BlockSpec((b, up), row),
+        out_shape=jax.ShapeDtypeStruct((w, up), jnp.int32),
+        interpret=interpret,
+    )(ext_states, u)

@@ -1,0 +1,38 @@
+"""Public wrapper for the WKV6 kernel + the O(1) decode-step path."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import interpret_default
+from repro.kernels.wkv6.wkv6 import wkv6_pallas
+
+
+def wkv6(r, k, v, w, u, *, interpret: bool | None = None, chunk: int = 128):
+    """RWKV6 time-mix. r/k/v/w [B, H, T, D]; u [H, D].
+
+    Returns (o [B, H, T, D] f32, s_final [B, H, D, D] f32).
+    """
+    interp = interpret_default() if interpret is None else interpret
+    b, h, t, d = r.shape
+    flat = lambda x: x.reshape(b * h, t, d)
+    ch = chunk
+    while t % ch != 0 or ch % 32 != 0:
+        ch //= 2
+        if ch < 32:
+            ch = t  # fall back to single chunk (t must be mult of SUB=32)
+            break
+    o, s_fin = wkv6_pallas(flat(r), flat(k), flat(v), flat(w), u,
+                           n_heads=h, interpret=interp, chunk=ch)
+    return o.reshape(b, h, t, d), s_fin.reshape(b, h, d, d)
+
+
+def wkv6_decode_step(s, r, k, v, w, u):
+    """One-token recurrence for serving. s [B, H, D, D]; r/k/v/w [B, H, D];
+    u [H, D]. Returns (o [B, H, D], s_next)."""
+    sf = s.astype(jnp.float32)
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+    bonus = jnp.sum(rf * uf[None] * kf, axis=-1, keepdims=True)  # [B,H,1]
+    o = jnp.einsum("bhk,bhkd->bhd", rf, sf) + bonus * vf
+    s_next = wf[..., None] * sf + kf[..., None] * vf[..., None, :]
+    return o, s_next

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the RWKV6 (Finch) time-mix recurrence.
+
+Per head with state S ∈ R^{D×D} (key-dim × value-dim), data-dependent
+per-channel decay w_t ∈ (0,1)^D and bonus u ∈ R^D:
+
+    o_t = r_t @ S  +  (Σ_d r_t[d]·u[d]·k_t[d]) · v_t
+    S  <- diag(w_t) @ S + k_t ⊗ v_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, w, u, *, s0=None):
+    """r, k, v, w: [B, H, T, D]; u: [H, D].
+
+    Returns (o [B, H, T, D] (f32), s_final [B, H, D, D] (f32)).
+    """
+    b, h, t, d = r.shape
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def per_head(r1, k1, v1, w1, u1, s_init):
+        def step(S, xs):
+            rt, kt, vt, wt = xs
+            bonus = jnp.sum(rt * u1 * kt)
+            ot = rt @ S + bonus * vt
+            S = wt[:, None] * S + jnp.outer(kt, vt)
+            return S, ot
+
+        s_fin, o = jax.lax.scan(step, s_init, (r1, k1, v1, w1))
+        return o, s_fin
+
+    if s0 is None:
+        s0 = jnp.zeros((b, h, d, d), jnp.float32)
+    else:
+        s0 = s0.astype(jnp.float32)
+
+    o, s_fin = jax.vmap(           # over batch
+        jax.vmap(per_head, in_axes=(0, 0, 0, 0, 0, 0)),  # over heads
+        in_axes=(0, 0, 0, 0, None, 0),
+    )(rf, kf, vf, wf, uf, s0)
+    return o, s_fin

@@ -1,0 +1,293 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST precede every other import (including the
+# __future__ import, which is why this module has none): jax locks the
+# device count at first initialization.
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture × input shape × mesh) cell:
+  lower the real step function (train_step / prefill / decode) with
+  ShapeDtypeStruct inputs and production shardings, .compile() it, and
+  record memory_analysis / cost_analysis / parsed collective bytes to a
+  JSON artifact consumed by benchmarks/roofline.py and EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch h2o-danube-3-4b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--out artifacts/dryrun]
+
+--all runs each cell in a fresh subprocess (XLA leaks compile-time memory
+across 80 big compiles otherwise) and tolerates per-cell failures: a
+failing cell records its error and the run continues.
+"""
+import argparse
+import functools
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+ARTIFACT_DIR = "artifacts/dryrun"
+
+
+def _microbatch_plan(cfg, shape, mesh_devices: int, data_shards: int) -> int:
+    """Pick grad-accumulation so per-device residual-stream activation
+    memory (the scan carry saved for backward: L·(B/d)·T·D·2 bytes) stays
+    under ~4 GiB. Powers of two, capped at the local batch — each
+    microbatch slice must stay divisible by the batch sharding (measured:
+    a 64-row slice over 256-way DP re-gathers activations every layer,
+    +12 TiB wire on rwkv6 — see EXPERIMENTS.md §Perf iteration 2)."""
+    if cfg.layout == "dp":
+        data_shards = mesh_devices     # batch is sharded over every axis
+    local_b = max(1, shape.global_batch // data_shards)
+    bytes_act = (cfg.n_layers * local_b * shape.seq_len * cfg.d_model * 2)
+    budget = 4 * 1024**3
+    mb = 1
+    while bytes_act / mb > budget and mb < local_b:
+        mb *= 2
+    return mb
+
+
+# §Perf hillclimb variants (EXPERIMENTS.md): applied with --opt. Baselines
+# stay untouched; optimized artifacts get the "__opt" suffix.
+OPTIMIZED = {
+    "h2o-danube-3-4b": dict(tp_shard_map=True),
+    "deepseek-7b": dict(tp_shard_map=True),
+    "rwkv6-3b": dict(layout="dp"),
+    "hymba-1.5b": dict(layout="dp"),
+    "smollm-360m": dict(layout="dp"),       # 0.7 GiB replicated params
+    "seamless-m4t-medium": dict(layout="dp"),
+    "qwen3-moe-235b-a22b": dict(moe_impl="shard_map_wg",
+                                seq_shard_cache=True),
+    "arctic-480b": dict(moe_impl="shard_map", seq_shard_cache=True),
+    "qwen1.5-32b": dict(seq_shard_cache=True,
+                        kv_cache_dtype="float8_e4m3fn"),
+    "internvl2-76b": dict(seq_shard_cache=True, tp_shard_map=True),
+}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             opt: bool = False):
+    import jax
+    import numpy as np
+
+    from repro.configs import SHAPES, applicable, get_config
+    from repro.distributed.context import mesh_context
+    from repro.distributed.sharding import (
+        batch_shardings,
+        params_shardings,
+        states_shardings,
+        data_size,
+    )
+    from repro.launch.hlo_analysis import analyze_collectives, \
+        loop_adjusted_flops
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.api import build_model, input_specs
+    from repro.train.step import (
+        TrainHParams,
+        init_train_state,
+        make_train_step,
+        train_state_shardings,
+    )
+
+    cfg = get_config(arch)
+    if opt:
+        cfg = cfg.replace(**OPTIMIZED.get(arch, {}))
+    shape = SHAPES[shape_name]
+    mesh_name = "multi" if multi_pod else "single"
+    cell_id = f"{arch}__{shape_name}__{mesh_name}" + ("__opt" if opt else "")
+    out_path = os.path.join(out_dir, cell_id + ".json")
+    os.makedirs(out_dir, exist_ok=True)
+
+    ok, reason = applicable(cfg, shape)
+    record = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "opt": opt,
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+        "kind": shape.kind, "status": "skipped", "skip_reason": reason,
+    }
+    if not ok:
+        with open(out_path, "w") as f:
+            json.dump(record, f, indent=1)
+        print(f"[dryrun] {cell_id}: SKIP ({reason})")
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dsize = data_size(mesh)
+    model_axis = 16
+    # expand KV to q-heads when Hkv doesn't divide the model axis but H
+    # does — keeps attention TP-shardable (see models/attention.py)
+    cfg = cfg.replace(gqa_expand=(cfg.n_heads % model_axis == 0
+                                  and cfg.n_kv_heads % model_axis != 0))
+    record["gqa_expand"] = cfg.gqa_expand
+    model = build_model(cfg)
+    key = jax.random.key(0)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        mb = _microbatch_plan(cfg, shape, len(jax.devices()), dsize)
+        record["microbatches"] = mb
+        hp = TrainHParams(microbatches=mb)
+        step = make_train_step(model, hp)
+        state_shapes = jax.eval_shape(
+            functools.partial(init_train_state, model), key)
+        state_sh = train_state_shardings(state_shapes, cfg, mesh)
+        batch_specs = input_specs(cfg, shape)
+        batch_sh = batch_shardings(batch_specs, mesh, layout=cfg.layout)
+        with mesh_context(mesh):
+            lowered = jax.jit(
+                step, in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, None),
+                donate_argnums=(0,),   # params/opt updated in place
+            ).lower(state_shapes, batch_specs)
+    else:
+        params_shapes = jax.eval_shape(model.init, key)
+        psh = params_shardings(params_shapes, cfg, mesh)
+        states_shapes = jax.eval_shape(
+            lambda: model.init_states(shape.global_batch, shape.seq_len))
+        ssh = states_shardings(states_shapes, cfg, mesh,
+                               global_batch=shape.global_batch)
+        batch_specs = input_specs(cfg, shape)
+        if shape.kind == "prefill":
+            batch_sh = batch_shardings(batch_specs, mesh, layout=cfg.layout)
+            fn = functools.partial(model.prefill)
+            with mesh_context(mesh):
+                lowered = jax.jit(
+                    fn, in_shardings=(psh, batch_sh, ssh),
+                    out_shardings=(None, ssh),
+                    donate_argnums=(2,),   # cache updated in place
+                ).lower(params_shapes, batch_specs, states_shapes)
+        else:  # decode
+            tok_sh = batch_shardings(batch_specs, mesh, layout=cfg.layout)
+            with mesh_context(mesh):
+                lowered = jax.jit(
+                    model.decode_step,
+                    in_shardings=(psh, tok_sh["token"], ssh),
+                    out_shardings=(None, ssh),
+                    donate_argnums=(2,),   # cache updated in place
+                ).lower(params_shapes, batch_specs["token"], states_shapes)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    colls = analyze_collectives(txt)
+    max_mult = loop_adjusted_flops(txt)
+
+    record.update({
+        "status": "ok",
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+        "cost_analysis": {
+            "flops": float(cost.get("flops", -1.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", -1.0)),
+            "transcendentals": float(cost.get("transcendentals", -1.0)),
+        },
+        "collectives": {
+            "raw_bytes": colls.raw_bytes,
+            "loop_bytes": colls.loop_bytes,
+            "wire_bytes": colls.wire_bytes,
+            "count": colls.count,
+            "unknown_trip_whiles": colls.unknown_trip_whiles,
+            "total_wire_bytes": colls.total_wire(),
+        },
+        "max_loop_multiplier": max_mult,
+        "n_devices": len(jax.devices()),
+    })
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=1)
+    print(f"[dryrun] {cell_id}: OK compile={t_compile:.1f}s "
+          f"temp={mem.temp_size_in_bytes/2**30:.2f}GiB "
+          f"args={mem.argument_size_in_bytes/2**30:.2f}GiB "
+          f"wire={colls.total_wire()/2**30:.3f}GiB")
+    return record
+
+
+def run_all(meshes: list[str], out_dir: str, archs=None, shapes=None,
+            timeout: int = 3600):
+    from repro.configs import ARCHS, SHAPES
+
+    archs = archs or list(ARCHS)
+    shapes = shapes or list(SHAPES)
+    results = []
+    for mesh in meshes:
+        for arch in archs:
+            for shape in shapes:
+                cell = f"{arch}__{shape}__{mesh}"
+                path = os.path.join(out_dir, cell + ".json")
+                if os.path.exists(path):
+                    with open(path) as f:
+                        rec = json.load(f)
+                    if rec.get("status") in ("ok", "skipped"):
+                        print(f"[dryrun] {cell}: cached")
+                        results.append(rec)
+                        continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape, "--mesh", mesh,
+                       "--out", out_dir]
+                try:
+                    proc = subprocess.run(cmd, timeout=timeout,
+                                          capture_output=True, text=True)
+                    if proc.returncode != 0:
+                        rec = {"arch": arch, "shape": shape, "mesh": mesh,
+                               "status": "error",
+                               "error": proc.stderr[-2000:]}
+                        with open(path, "w") as f:
+                            json.dump(rec, f, indent=1)
+                        print(f"[dryrun] {cell}: ERROR")
+                    else:
+                        sys.stdout.write(proc.stdout)
+                        with open(path) as f:
+                            rec = json.load(f)
+                except subprocess.TimeoutExpired:
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh,
+                           "status": "timeout"}
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                    print(f"[dryrun] {cell}: TIMEOUT")
+                results.append(rec)
+    n_ok = sum(r.get("status") == "ok" for r in results)
+    n_skip = sum(r.get("status") == "skipped" for r in results)
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, "
+          f"{len(results) - n_ok - n_skip} failed, of {len(results)}")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=ARTIFACT_DIR)
+    ap.add_argument("--opt", action="store_true",
+                    help="apply the §Perf optimized variant for this arch")
+    ap.add_argument("--timeout", type=int, default=3600)
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        run_all(meshes, args.out, timeout=args.timeout)
+    else:
+        assert args.arch and args.shape, "--arch and --shape required"
+        for m in meshes:
+            run_cell(args.arch, args.shape, m == "multi", args.out,
+                     opt=args.opt)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,164 @@
+"""Compiled-HLO analysis for the roofline report.
+
+Extracts, from `compiled.as_text()`:
+
+  * every collective op (all-reduce / all-gather / reduce-scatter /
+    all-to-all / collective-permute) with its *per-device* result bytes
+    (shapes in SPMD-partitioned HLO are local) and its replica-group size,
+  * the `while` call graph with trip counts recovered from the loop
+    condition's comparison constant (XLA materializes scan trip counts as
+    `constant(N)` in the condition computation — verified on this
+    toolchain), so collectives inside scanned layer bodies are multiplied
+    by the real iteration count instead of being counted once
+    (cost_analysis counts loop bodies ONCE — measured, see DESIGN.md §9).
+
+Wire-cost model per op (ring algorithms, n = replica-group participants):
+  all-reduce       2·(n-1)/n · bytes
+  all-gather /
+  reduce-scatter   (n-1)/n · bytes
+  all-to-all       (n-1)/n · bytes
+  collective-permute   1.0 · bytes
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_WHILE_RE = re.compile(
+    r"while\(.*\), condition=([%\w\.\-]+), body=([%\w\.\-]+)")
+_CALL_RE = re.compile(r"(?:call|conditional)\(.*?to_apply=([%\w\.\-]+)")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?(%?[\w\.\-]+)\s+\(.*\)\s+->.*\{")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_WIRE_FACTOR = {
+    "all-reduce": lambda n: 2 * (n - 1) / max(n, 1),
+    "all-gather": lambda n: (n - 1) / max(n, 1),
+    "reduce-scatter": lambda n: (n - 1) / max(n, 1),
+    "all-to-all": lambda n: (n - 1) / max(n, 1),
+    "collective-permute": lambda n: 1.0,
+}
+
+
+@dataclass
+class CollectiveStats:
+    raw_bytes: dict = field(default_factory=dict)        # opcode -> bytes ×1
+    loop_bytes: dict = field(default_factory=dict)       # × trip counts
+    wire_bytes: dict = field(default_factory=dict)       # ring-cost adjusted
+    count: dict = field(default_factory=dict)
+    unknown_trip_whiles: int = 0
+
+    def total_wire(self) -> float:
+        return float(sum(self.wire_bytes.values()))
+
+    def total_loop(self) -> float:
+        return float(sum(self.loop_bytes.values()))
+
+
+def parse_computations(txt: str) -> tuple[dict, str]:
+    blocks: dict[str, list[str]] = {}
+    entry = ""
+    cur = None
+    for line in txt.splitlines():
+        m = _COMP_HDR.match(line)
+        if m:
+            cur = m.group(1).lstrip("%")
+            blocks[cur] = []
+            if line.startswith("ENTRY"):
+                entry = cur
+            continue
+        if cur is not None:
+            blocks[cur].append(line)
+    return blocks, entry
+
+
+def trip_count(cond_lines: list[str]) -> int | None:
+    consts = [int(c) for l in cond_lines
+              for c in re.findall(r"constant\((\d+)\)", l)]
+    return max(consts) if consts else None
+
+
+def analyze_collectives(txt: str) -> CollectiveStats:
+    blocks, entry = parse_computations(txt)
+    stats = CollectiveStats()
+
+    def visit(name: str, mult: float, seen: tuple):
+        if name not in blocks or name in seen:
+            return
+        lines = blocks[name]
+        body = "\n".join(lines)
+        # collectives directly in this computation
+        for line in lines:
+            m = _COLL_RE.search(line)
+            if not m:
+                continue
+            type_str, op = m.group(1), m.group(2)
+            nbytes = _shape_bytes(type_str)
+            g = _GROUPS_RE.search(line)
+            n_per_group = int(g.group(2)) if g else 2
+            stats.raw_bytes[op] = stats.raw_bytes.get(op, 0) + nbytes
+            stats.loop_bytes[op] = (stats.loop_bytes.get(op, 0)
+                                    + nbytes * mult)
+            stats.wire_bytes[op] = (
+                stats.wire_bytes.get(op, 0)
+                + nbytes * mult * _WIRE_FACTOR[op](n_per_group))
+            stats.count[op] = stats.count.get(op, 0) + 1
+        # recurse into whiles with trip multipliers
+        for cond, wbody in _WHILE_RE.findall(body):
+            cond_n, body_n = cond.lstrip("%"), wbody.lstrip("%")
+            trips = trip_count(blocks.get(cond_n, []))
+            if trips is None:
+                trips = 1
+                stats.unknown_trip_whiles += 1
+            visit(body_n, mult * trips, seen + (name,))
+        # plain calls / conditionals
+        for callee in _CALL_RE.findall(body):
+            visit(callee.lstrip("%"), mult, seen + (name,))
+
+    visit(entry, 1.0, ())
+    return stats
+
+
+def loop_adjusted_flops(txt: str, flops_per_comp_hint: None = None):
+    """Total trip-count product of the deepest while nest — used to sanity
+    check cost_analysis undercounting (the analytic model in
+    benchmarks/roofline.py is the primary FLOPs source)."""
+    blocks, entry = parse_computations(txt)
+    best = {"mult": 1.0}
+
+    def visit(name, mult, seen):
+        if name not in blocks or name in seen:
+            return
+        best["mult"] = max(best["mult"], mult)
+        body = "\n".join(blocks[name])
+        for cond, wbody in _WHILE_RE.findall(body):
+            trips = trip_count(blocks.get(cond.lstrip("%"), [])) or 1
+            visit(wbody.lstrip("%"), mult * trips, seen + (name,))
+
+    visit(entry, 1.0, ())
+    return best["mult"]

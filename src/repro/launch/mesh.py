@@ -1,0 +1,28 @@
+"""Production mesh builder.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (required so smoke tests see 1 device while the
+dry-run sees 512).
+
+Topology (TPU v5e target):
+  single pod : (data=16, model=16)            = 256 chips
+  multi-pod  : (pod=2, data=16, model=16)     = 512 chips
+The 'model' axis is mapped innermost so TP/EP collectives ride the fast
+intra-pod ICI ring; the 'pod' axis crosses the slow inter-pod links and
+carries only DP gradient reduction (optionally int8-compressed,
+distributed/compress.py).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh over host-platform devices (tests)."""
+    return jax.make_mesh(shape, axes)

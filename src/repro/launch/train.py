@@ -1,0 +1,92 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \\
+      --reduced --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+On this CPU container use --reduced (the full configs are exercised via the
+dry-run); on a real TPU slice drop --reduced and the same code path runs
+the production mesh (mesh selection via --mesh).
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.distributed.sharding import batch_shardings
+from repro.models.api import build_model
+from repro.train.data import DataConfig, SyntheticLMStream
+from repro.train.loop import LoopConfig, train_loop
+from repro.train.step import (
+    TrainHParams,
+    init_train_state,
+    make_train_step,
+    train_state_shardings,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--metrics-csv", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", default="none",
+                    choices=["none", "single", "multi"])
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+
+    hp = TrainHParams(peak_lr=args.lr, warmup_steps=max(args.steps // 20, 5),
+                      total_steps=args.steps,
+                      microbatches=args.microbatches)
+    step_fn = make_train_step(model, hp)
+    state = init_train_state(model, jax.random.key(args.seed))
+
+    state_sh = None
+    put_batch = None
+    if args.mesh != "none":
+        from repro.launch.mesh import make_production_mesh
+
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+        state_shapes = jax.eval_shape(
+            functools.partial(init_train_state, model),
+            jax.random.key(args.seed))
+        state_sh = train_state_shardings(state_shapes, cfg, mesh)
+        state = jax.device_put(state, state_sh)
+        step_fn = jax.jit(step_fn, in_shardings=(state_sh, None),
+                          out_shardings=(state_sh, None))
+    else:
+        step_fn = jax.jit(step_fn)
+
+    stream = SyntheticLMStream(DataConfig(
+        vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch,
+        seed=args.seed))
+    loop_cfg = LoopConfig(total_steps=args.steps,
+                          ckpt_every=args.ckpt_every,
+                          ckpt_dir=args.ckpt_dir,
+                          metrics_csv=args.metrics_csv)
+    state, report = train_loop(step_fn, state, stream, loop_cfg,
+                               state_shardings=state_sh,
+                               put_batch=put_batch)
+    print(f"[train] ran {report.steps_run} steps; "
+          f"final loss={report.final_metrics.get('loss'):.4f} "
+          f"(resumed_from={report.resumed_from}, "
+          f"stragglers={len(report.straggler_steps)})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.mabs.axelrod import AxelrodModel
+from repro.mabs.sir import SIRModel
+
+__all__ = ["AxelrodModel", "SIRModel"]

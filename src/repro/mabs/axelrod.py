@@ -1,0 +1,167 @@
+"""Axelrod-type cultural dynamics (paper §4.1, spec of Băbeanu et al. 2018).
+
+N agents on a complete graph; each holds F traits, each trait in {0..q-1}.
+One *task* = one pairwise interaction (chain granularity, paper §3.4):
+
+  creation  — draw (source, target) uniformly at random among distinct
+              agents; bind the task's PRNG key (task depth: ids + randomness
+              are fixed at creation; the trait work happens at execution).
+  execution — overlap o = (1/F) Σ_f [s_f == t_f]; with probability o,
+              if 0 < o < 1 and o >= 1 - ω (bounded confidence), the target
+              copies one uniformly-chosen differing feature from the source.
+
+Dependence rules (record, paper §3.5):
+
+  paper rule  (strict=False): later task i depends on earlier j iff
+      src_i == tgt_j  or  tgt_i == tgt_j          (flow + output hazards)
+  strict rule (strict=True): adds the anti-dependence the paper's record
+      omits:  tgt_i == src_j  (task i would overwrite what j still reads).
+      Only the strict rule is bit-exact vs sequential execution; tests
+      demonstrate the divergence of the paper rule (DESIGN.md §10).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.model import MABSModel
+from repro.core.workersim import DESModel
+
+
+@dataclass
+class AxelrodConfig:
+    n_agents: int = 10_000
+    n_features: int = 3     # F — the paper's task-size proxy s
+    q: int = 3              # traits per feature
+    omega: float = 0.95     # bounded-confidence threshold
+
+
+class AxelrodModel(MABSModel):
+    name = "axelrod"
+
+    def __init__(self, config: AxelrodConfig | None = None):
+        self.cfg = config or AxelrodConfig()
+
+    # ------------------------------------------------------------- state
+    def init_state(self, rng: jax.Array):
+        cfg = self.cfg
+        traits = jax.random.randint(
+            rng, (cfg.n_agents, cfg.n_features), 0, cfg.q, dtype=jnp.int32)
+        return {"traits": traits}
+
+    # ---------------------------------------------------------- creation
+    def create_tasks(self, base_key: jax.Array, start_index, count: int):
+        cfg = self.cfg
+        idx = start_index + jnp.arange(count)
+
+        def one(i):
+            k = jax.random.fold_in(base_key, i)
+            ks, kt, kx = jax.random.split(k, 3)
+            src = jax.random.randint(ks, (), 0, cfg.n_agents)
+            # distinct target: draw from n-1 and shift past src
+            tgt = jax.random.randint(kt, (), 0, cfg.n_agents - 1)
+            tgt = jnp.where(tgt >= src, tgt + 1, tgt)
+            # kx is the execution key — randomness is *bound at creation*
+            # (task-depth split), so scheduling cannot alter the trajectory.
+            return src.astype(jnp.int32), tgt.astype(jnp.int32), kx
+
+        src, tgt, key = jax.vmap(one)(idx)
+        return {"src": src, "tgt": tgt, "index": idx.astype(jnp.int32),
+                "key": key}
+
+    # -------------------------------------------------------- dependence
+    def conflicts(self, a, b, *, strict: bool = True):
+        """later a vs earlier b (broadcasting pytrees of id arrays)."""
+        c = (a["src"] == b["tgt"]) | (a["tgt"] == b["tgt"])  # paper record rule
+        if strict:
+            c = c | (a["tgt"] == b["src"])  # anti-dependence closure
+        return c
+
+    # --------------------------------------------------------- execution
+    def execute_wave(self, state, recipes, mask):
+        cfg = self.cfg
+        traits = state["traits"]
+        src, tgt, idx = recipes["src"], recipes["tgt"], recipes["index"]
+
+        s_tr = traits[src]                      # [W, F]
+        t_tr = traits[tgt]                      # [W, F]
+        eq = s_tr == t_tr                       # [W, F]
+        overlap = jnp.mean(eq.astype(jnp.float32), axis=-1)  # [W]
+
+        # Execution randomness was bound at creation (recipe carries the key).
+        def draw(k):
+            ku, kf = jax.random.split(k)
+            u = jax.random.uniform(ku)
+            g = jax.random.uniform(kf, (cfg.n_features,))
+            return u, g
+
+        u, gumb = jax.vmap(draw)(recipes["key"])  # [W], [W, F]
+
+        interact = (
+            mask
+            & (u < overlap)
+            & (overlap < 1.0)
+            & (overlap >= 1.0 - cfg.omega)
+        )
+        # choose one differing feature uniformly (random-keyed argmax trick)
+        scores = jnp.where(~eq, gumb, -1.0)     # differing features only
+        feat = jnp.argmax(scores, axis=-1)      # [W]
+        new_val = jnp.take_along_axis(s_tr, feat[:, None], axis=-1)[:, 0]
+
+        upd_rows = jnp.where(interact, tgt, cfg.n_agents)  # OOB drop when inactive
+        updated = traits.at[upd_rows, feat].set(
+            jnp.where(interact, new_val, 0), mode="drop")
+        return {"traits": updated}
+
+    # ------------------------------------------------- DES model adapter
+    def des_model(self, *, seed: int = 0, exec_cost=None, create_cost=None,
+                  strict: bool = True) -> DESModel:
+        """Host-side adapter for the protocol simulator. Recipes are
+        generated with NumPy identically-distributed to create_tasks."""
+        cfg = self.cfg
+        rs = np.random.RandomState(seed)
+
+        cache: dict[int, tuple[int, int]] = {}
+
+        def recipes_fn(i: int):
+            if i not in cache:
+                src = int(rs.randint(cfg.n_agents))
+                tgt = int(rs.randint(cfg.n_agents - 1))
+                if tgt >= src:
+                    tgt += 1
+                cache[i] = (src, tgt)
+            return cache[i]
+
+        # record: (targets_seen, sources_seen) as Python sets
+        def record_new():
+            return (set(), set())
+
+        def record_add(rec, recipe):
+            tgts, srcs = rec
+            tgts.add(recipe[1])
+            srcs.add(recipe[0])
+            return rec
+
+        def depends(rec, recipe):
+            tgts, srcs = rec
+            src, tgt = recipe
+            d = (src in tgts) or (tgt in tgts)
+            if strict:
+                d = d or (tgt in srcs)
+            return d
+
+        c_exec = exec_cost if exec_cost is not None else (
+            lambda r: 1e-7 * cfg.n_features + 5e-7)
+        c_create = create_cost if create_cost is not None else (lambda: 3e-7)
+        return DESModel(
+            recipes_fn=recipes_fn,
+            exec_cost_fn=c_exec,
+            create_cost_fn=c_create,
+            record_new=record_new,
+            record_add=record_add,
+            depends=depends,
+        )

@@ -1,0 +1,232 @@
+"""SIRS epidemic on a fixed ring graph of constant degree k (paper §4.2).
+
+N agents at the nodes of a ring where agent v is connected to v±1..±k/2.
+States: S=0, I=1, R=2. Per global step, each agent may advance one state:
+  S->I with prob p_SI * (infected fraction of its k neighbours)
+  I->R with prob p_IR
+  R->S with prob p_RS
+using the *previous* step's states (synchronous update), realized with a
+new-state buffer.
+
+Protocol mapping (paper §4.2): the system is partitioned into M = N/s fixed
+contiguous subsets of size s (chain granularity). Each global step emits
+2M tasks:
+  type A (compute): new_states[subset] := transition(states[nbhd(subset)])
+  type B (commit):  states[subset]     := new_states[subset]
+Chain order: step r = [A_0..A_{M-1}, B_0..B_{M-1}].
+
+Dependence rules — with blk(i) the subset id and adjacency on the aggregate
+subset graph (circular block distance <= ceil((k/2)/s), including self):
+
+  paper rule (strict=False):
+    B_i depends on earlier A_j  iff blk_i == blk_j
+    A_i depends on earlier B_j  iff adjacent(blk_i, blk_j)
+  strict rule (strict=True) adds the anti-dependence the paper omits:
+    B_i depends on earlier A_j  iff adjacent(blk_i, blk_j)
+    (B_i writes states[blk_i] that a pending A_j still needs to read),
+    plus the A/A output hazard on the same subset (defensive; already
+    implied transitively by the round structure).
+
+The recipe holds (subset id, type flag, step) — exactly the paper's "agent
+subset identifier along with a binary flag indicating the task's type".
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.model import MABSModel
+from repro.core.workersim import DESModel
+
+S, I, R = 0, 1, 2
+
+
+@dataclass
+class SIRConfig:
+    n_agents: int = 4_000
+    k: int = 14                 # ring degree (k/2 on each side)
+    subset_size: int = 50       # s — chain granularity / task-size proxy
+    p_si: float = 0.8
+    p_ir: float = 0.1
+    p_rs: float = 0.3
+    i0: float = 0.05            # initial infected fraction
+
+    @property
+    def n_subsets(self) -> int:
+        assert self.n_agents % self.subset_size == 0, (
+            "subset_size must divide n_agents")
+        return self.n_agents // self.subset_size
+
+    @property
+    def block_reach(self) -> int:
+        """Aggregate-graph adjacency radius in blocks (incl. self = 0)."""
+        return -(-(self.k // 2) // self.subset_size)  # ceil division
+
+    def tasks_per_step(self) -> int:
+        return 2 * self.n_subsets
+
+
+class SIRModel(MABSModel):
+    name = "sir"
+
+    def __init__(self, config: SIRConfig | None = None):
+        self.cfg = config or SIRConfig()
+
+    # ------------------------------------------------------------- state
+    def init_state(self, rng: jax.Array):
+        cfg = self.cfg
+        u = jax.random.uniform(rng, (cfg.n_agents,))
+        states = jnp.where(u < cfg.i0, I, S).astype(jnp.int8)
+        return {"states": states, "new_states": states}
+
+    # ---------------------------------------------------------- creation
+    def create_tasks(self, base_key: jax.Array, start_index, count: int):
+        cfg = self.cfg
+        m = cfg.n_subsets
+        idx = start_index + jnp.arange(count)
+        step = idx // (2 * m)
+        within = idx % (2 * m)
+        ttype = (within >= m).astype(jnp.int32)   # 0 = A (compute), 1 = B
+        subset = (within % m).astype(jnp.int32)
+        key = jax.vmap(lambda i: jax.random.fold_in(base_key, i))(idx)
+        return {
+            "subset": subset,
+            "type": ttype,
+            "step": step.astype(jnp.int32),
+            "index": idx.astype(jnp.int32),
+            "key": key,
+        }
+
+    # -------------------------------------------------------- dependence
+    def _adjacent(self, b1, b2):
+        m = self.cfg.n_subsets
+        d = jnp.abs(b1 - b2)
+        circ = jnp.minimum(d, m - d)
+        return circ <= self.cfg.block_reach
+
+    def conflicts(self, a, b, *, strict: bool = True):
+        """later a vs earlier b."""
+        same = a["subset"] == b["subset"]
+        adj = self._adjacent(a["subset"], b["subset"])
+        a_is_b = a["type"] == 1
+        b_is_a = b["type"] == 0
+        # paper rules
+        commit_after_compute = a_is_b & b_is_a & same
+        compute_after_commit = (~a_is_b) & (~b_is_a) & adj
+        c = commit_after_compute | compute_after_commit
+        if strict:
+            # anti-dependence: a commit may not overtake a pending compute
+            # of an adjacent subset (that compute still reads old states).
+            c = c | (a_is_b & b_is_a & adj)
+            # defensive output hazard: two computes on the same subset.
+            c = c | ((~a_is_b) & b_is_a & same)
+        return c
+
+    # --------------------------------------------------------- execution
+    def execute_wave(self, state, recipes, mask):
+        cfg = self.cfg
+        s_sz = cfg.subset_size
+        states, new_states = state["states"], state["new_states"]
+
+        subset = recipes["subset"]                      # [W]
+        ttype = recipes["type"]                         # [W]
+        agents = subset[:, None] * s_sz + jnp.arange(s_sz)[None, :]  # [W,s]
+
+        # ---- type A: compute new states from current states ----
+        half = cfg.k // 2
+        offs = jnp.concatenate(
+            [jnp.arange(1, half + 1), -jnp.arange(1, half + 1)])  # [k]
+        nbrs = (agents[:, :, None] + offs[None, None, :]) % cfg.n_agents
+        inf_frac = jnp.mean(
+            (states[nbrs] == I).astype(jnp.float32), axis=-1)      # [W,s]
+
+        cur = states[agents]                                       # [W,s]
+        u = jax.vmap(
+            lambda k: jax.random.uniform(k, (s_sz,)))(recipes["key"])
+
+        nxt = jnp.where(
+            (cur == S) & (u < cfg.p_si * inf_frac), I,
+            jnp.where(
+                (cur == I) & (u < cfg.p_ir), R,
+                jnp.where((cur == R) & (u < cfg.p_rs), S, cur),
+            ),
+        ).astype(jnp.int8)
+
+        do_a = mask & (ttype == 0)
+        rows_a = jnp.where(do_a[:, None], agents, cfg.n_agents)    # OOB drop
+        new_states = new_states.at[rows_a.reshape(-1)].set(
+            nxt.reshape(-1), mode="drop")
+
+        # ---- type B: commit new states ----
+        do_b = mask & (ttype == 1)
+        rows_b = jnp.where(do_b[:, None], agents, cfg.n_agents)
+        committed = new_states[agents]
+        states = states.at[rows_b.reshape(-1)].set(
+            committed.reshape(-1), mode="drop")
+
+        return {"states": states, "new_states": new_states}
+
+    # ------------------------------------------------- DES model adapter
+    def des_model(self, *, exec_cost=None, create_cost=None,
+                  strict: bool = True) -> DESModel:
+        cfg = self.cfg
+        m = cfg.n_subsets
+        reach = cfg.block_reach
+
+        def recipes_fn(i: int):
+            step, within = divmod(i, 2 * m)
+            ttype, subset = (1, within - m) if within >= m else (0, within)
+            return (subset, ttype)
+
+        def record_new():
+            return (set(), set())   # (computes_seen, commits_seen) subsets
+
+        def record_add(rec, recipe):
+            computes, commits = rec
+            subset, ttype = recipe
+            (commits if ttype else computes).add(subset)
+            return rec
+
+        def adjacent(b, seen: set) -> bool:
+            for d in range(-reach, reach + 1):
+                if (b + d) % m in seen:
+                    return True
+            return False
+
+        def depends(rec, recipe):
+            computes, commits = rec
+            subset, ttype = recipe
+            if ttype == 1:  # commit
+                if strict:
+                    return adjacent(subset, computes)
+                return subset in computes
+            # compute
+            d = adjacent(subset, commits)
+            if strict:
+                d = d or (subset in computes)
+            return d
+
+        c_exec = exec_cost if exec_cost is not None else (
+            lambda r: (2e-8 * cfg.k if r[1] == 0 else 4e-9)
+            * cfg.subset_size + 5e-7)
+        c_create = create_cost if create_cost is not None else (lambda: 3e-7)
+        return DESModel(
+            recipes_fn=recipes_fn,
+            exec_cost_fn=c_exec,
+            create_cost_fn=c_create,
+            record_new=record_new,
+            record_add=record_add,
+            depends=depends,
+        )
+
+    # -------------------------------------------------- reference stepper
+    def reference_step(self, state, step_key: jax.Array):
+        """Whole-system synchronous step (no protocol) — used to sanity-check
+        model dynamics; equals running 2M tasks when the per-agent keys
+        match, which they do because execute_wave keys agents by task key."""
+        raise NotImplementedError(
+            "use run_oracle for trajectory checks; reference_step exists "
+            "only as documentation of the synchronous semantics")

@@ -1,0 +1,211 @@
+"""Public model API — one `Model` object per architecture config.
+
+Pure-functional: params and streaming states are pytrees; every method is
+jit/pjit-compatible. The same object serves training (loss/grads), prefill
+and decode (serving), and the dry-run (ShapeDtypeStruct input specs).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import cross_entropy, dtype_of, embed
+from repro.models.transformer import (
+    forward_hidden,
+    init_params,
+    init_states,
+    logits_head,
+    plan_segments,
+    run_encoder,
+)
+
+
+class Model:
+    """Decoder-only families (dense / moe / ssm / hybrid / vlm)."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.segments = plan_segments(cfg)
+
+    # ----------------------------------------------------------- params
+    def init(self, key):
+        return init_params(self.cfg, key)
+
+    # ------------------------------------------------------------ train
+    def _embed_inputs(self, params, batch, include_prefix: bool = True):
+        """Returns (x [B, Tfull, D], n_prefix) — prefix = meta tokens and/or
+        stub frontend embeddings (vlm patches), prepended before text."""
+        cfg = self.cfg
+        x = embed(params["embed"], batch["tokens"])
+        n_prefix = 0
+        if include_prefix and cfg.frontend == "vision_stub" \
+                and "patch_embeds" in batch:
+            pe = batch["patch_embeds"].astype(x.dtype)
+            x = jnp.concatenate([pe, x], axis=1)
+            n_prefix += pe.shape[1]
+        if include_prefix and cfg.n_prefix_tokens:
+            pref = jnp.broadcast_to(
+                params["prefix"][None], (x.shape[0],) + params["prefix"].shape
+            ).astype(x.dtype)
+            x = jnp.concatenate([pref, x], axis=1)
+            n_prefix += pref.shape[1]
+        return x, n_prefix
+
+    def apply_train(self, params, batch):
+        cfg = self.cfg
+        x, n_prefix = self._embed_inputs(params, batch)
+        positions = jnp.arange(x.shape[1])
+        hidden, _, aux = forward_hidden(params, x, cfg, positions=positions,
+                                        mode="train")
+        hidden = hidden[:, n_prefix:]
+        return logits_head(params, hidden, cfg), aux
+
+    def loss(self, params, batch):
+        logits, aux = self.apply_train(params, batch)
+        ce = cross_entropy(logits, batch["labels"])
+        total = ce
+        metrics = {"ce": ce}
+        if self.cfg.moe is not None:
+            total = (total + 0.01 * aux["load_balance_loss"]
+                     + self.cfg.moe.router_z_loss * aux["router_z_loss"])
+            metrics.update(aux)
+        return total, metrics
+
+    # ---------------------------------------------------------- serving
+    def init_states(self, batch: int, max_len: int):
+        cfg = self.cfg
+        return {
+            "segs": init_states(cfg, batch, max_len,
+                                dtype=dtype_of(cfg.param_dtype)),
+            "pos": jnp.zeros((batch,), jnp.int32),  # per-request timeline
+        }
+
+    def prefill(self, params, batch, states, *, chunked: bool = False,
+                include_prefix: bool = True):
+        """Prompt pass; returns (last-token logits [B, V], states).
+
+        chunked=True: continuation-safe path — attention runs against the
+        (possibly non-empty) cache, SSM/RWKV states carry; used by the
+        serving engine's chunked prefill (straggler mitigation). The
+        default one-shot path assumes an empty, exactly-sized cache and
+        uses the memory-bounded chunked-attention impl.
+        """
+        cfg = self.cfg
+        x, n_prefix = self._embed_inputs(params, batch, include_prefix)
+        positions = (states["pos"][:, None]
+                     + jnp.arange(x.shape[1])[None, :])
+        hidden, segs, _ = forward_hidden(
+            params, x, cfg, positions=positions, states=states["segs"],
+            mode="chunk" if chunked else "prefill")
+        logits = logits_head(params, hidden[:, -1:], cfg)[:, 0]
+        return logits, {"segs": segs, "pos": states["pos"] + x.shape[1]}
+
+    def decode_step(self, params, token, states):
+        """token [B, 1] -> (logits [B, V], states)."""
+        cfg = self.cfg
+        x = embed(params["embed"], token)
+        positions = states["pos"][:, None]
+        hidden, segs, _ = forward_hidden(
+            params, x, cfg, positions=positions, states=states["segs"],
+            mode="decode")
+        logits = logits_head(params, hidden[:, -1:], cfg)[:, 0]
+        return logits, {"segs": segs, "pos": states["pos"] + 1}
+
+
+class EncDecModel(Model):
+    """Encoder–decoder (seamless-m4t): frontend-stub source embeddings."""
+
+    def init_states(self, batch: int, max_len: int, src_len: int | None = None):
+        st = super().init_states(batch, max_len)
+        st["enc_out"] = jnp.zeros(
+            (batch, src_len or max_len, self.cfg.d_model),
+            dtype_of(self.cfg.param_dtype))
+        return st
+
+    def apply_train(self, params, batch):
+        cfg = self.cfg
+        enc_out = run_encoder(params, batch["src_embeds"].astype(
+            dtype_of(cfg.param_dtype)), cfg)
+        x = embed(params["embed"], batch["tokens"])
+        positions = jnp.arange(x.shape[1])
+        hidden, _, aux = forward_hidden(params, x, cfg, positions=positions,
+                                        mode="train", enc_out=enc_out)
+        return logits_head(params, hidden, cfg), aux
+
+    def prefill(self, params, batch, states, *, chunked: bool = False,
+                include_prefix: bool = True):
+        cfg = self.cfg
+        enc_out = run_encoder(params, batch["src_embeds"].astype(
+            dtype_of(cfg.param_dtype)), cfg)
+        x = embed(params["embed"], batch["tokens"])
+        positions = (states["pos"][:, None]
+                     + jnp.arange(x.shape[1])[None, :])
+        hidden, segs, _ = forward_hidden(
+            params, x, cfg, positions=positions, states=states["segs"],
+            mode="chunk" if chunked else "prefill", enc_out=enc_out)
+        logits = logits_head(params, hidden[:, -1:], cfg)[:, 0]
+        return logits, {"segs": segs, "pos": states["pos"] + x.shape[1],
+                        "enc_out": enc_out}
+
+    def decode_step(self, params, token, states):
+        cfg = self.cfg
+        x = embed(params["embed"], token)
+        positions = states["pos"][:, None]
+        hidden, segs, _ = forward_hidden(
+            params, x, cfg, positions=positions, states=states["segs"],
+            mode="decode", enc_out=states["enc_out"])
+        logits = logits_head(params, hidden[:, -1:], cfg)[:, 0]
+        return logits, {"segs": segs, "pos": states["pos"] + 1,
+                        "enc_out": states["enc_out"]}
+
+
+def build_model(cfg) -> Model:
+    if cfg.is_encdec:
+        return EncDecModel(cfg)
+    return Model(cfg)
+
+
+# ------------------------------------------------------------ input specs
+def input_specs(cfg, shape, *, for_decode_states: bool = False):
+    """ShapeDtypeStruct stand-ins for every model input of the given shape
+    cell (no allocation). Frontend stubs (audio frames / vision patches)
+    appear here as precomputed embedding inputs, per the assignment."""
+    b, t = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+
+    if shape.kind == "train":
+        batch: dict[str, Any] = {
+            "tokens": jax.ShapeDtypeStruct((b, t), tok),
+            "labels": jax.ShapeDtypeStruct((b, t), tok),
+        }
+        if cfg.frontend == "vision_stub":
+            # patches replace a prefix of the text budget (keep totals sane)
+            n_patch = min(1024, t // 4)
+            batch["tokens"] = jax.ShapeDtypeStruct((b, t - n_patch), tok)
+            batch["labels"] = jax.ShapeDtypeStruct((b, t - n_patch), tok)
+            batch["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, n_patch, cfg.d_model), jnp.bfloat16)
+        if cfg.is_encdec:
+            # audio stub: frame embeddings on the encoder side
+            batch["src_embeds"] = jax.ShapeDtypeStruct(
+                (b, t, cfg.d_model), jnp.bfloat16)
+            batch["tokens"] = jax.ShapeDtypeStruct((b, t), tok)
+            batch["labels"] = jax.ShapeDtypeStruct((b, t), tok)
+        return batch
+
+    if shape.kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((b, t), tok)}
+        if cfg.frontend == "vision_stub":
+            n_patch = min(1024, t // 4)
+            batch["tokens"] = jax.ShapeDtypeStruct((b, t - n_patch), tok)
+            batch["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, n_patch, cfg.d_model), jnp.bfloat16)
+        if cfg.is_encdec:
+            batch["src_embeds"] = jax.ShapeDtypeStruct(
+                (b, t, cfg.d_model), jnp.bfloat16)
+        return batch
+
+    # decode: one new token against a cache of length t-1
+    return {"token": jax.ShapeDtypeStruct((b, 1), tok)}

@@ -1,0 +1,247 @@
+"""GQA attention with three interchangeable inner implementations.
+
+  "ref"     — materialized [T, S] logits (small tests only)
+  "chunked" — pure-jnp flash-style scan over query chunks with online
+              softmax and *structural* sliding-window KV slicing. This is
+              the default for lowering/dry-run: peak temp is O(bq·S) per
+              layer instead of O(T·S), and out-of-window KV is never read.
+  "pallas"  — the kernels/flash fused kernel (TPU target; interpret on CPU)
+
+All three share semantics (tested against each other): causal masking,
+sliding window, GQA head grouping, end-alignment when S > T.
+
+KV cache: a *ring buffer* of capacity Smax with absolute-position tracking
+(`kpos`); for sliding-window layers Smax = window, so a 500k-token decode
+holds only window-sized KV per layer. A full-attention cache is the same
+structure with Smax >= total length (the ring never wraps).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, init_dense, rope
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # [B, Hkv, Smax, hd]
+    v: jax.Array
+    length: jax.Array     # [B] int32 — absolute tokens seen, per request
+    kpos: jax.Array       # [B, Smax] int32 — absolute position per slot (-1)
+
+
+def init_kv_cache(batch, n_kv_heads, smax, head_dim, dtype=jnp.bfloat16):
+    return KVCache(
+        k=jnp.zeros((batch, n_kv_heads, smax, head_dim), dtype),
+        v=jnp.zeros((batch, n_kv_heads, smax, head_dim), dtype),
+        length=jnp.zeros((batch,), jnp.int32),
+        kpos=jnp.full((batch, smax), -1, jnp.int32),
+    )
+
+
+def init_attention(key, cfg, *, d_model=None, cross=False):
+    d = d_model or cfg.d_model
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.param_dtype]
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_dense(ks[0], d, hq * hd, dt, bias=cfg.qkv_bias),
+        "wk": init_dense(ks[1], d, hkv * hd, dt, bias=cfg.qkv_bias),
+        "wv": init_dense(ks[2], d, hkv * hd, dt, bias=cfg.qkv_bias),
+        "wo": init_dense(ks[3], hq * hd, d, dt,
+                         scale=(hq * hd) ** -0.5 / (2 * cfg.n_layers) ** 0.5),
+    }
+
+
+# ----------------------------------------------------------- inner impls
+def _attn_ref(q, k, v, *, causal, window, scale):
+    from repro.kernels.flash.ref import attention_ref
+
+    return attention_ref(q, k, v, causal=causal, window=window, scale=scale)
+
+
+def _attn_pallas(q, k, v, *, causal, window, scale):
+    from repro.kernels.flash.ops import flash_attention
+
+    return flash_attention(q, k, v, causal=causal, window=window, scale=scale)
+
+
+def _attn_chunked(q, k, v, *, causal, window, scale, chunk,
+                  gqa_expand=False):
+    """Flash-style online softmax over query chunks, GQA-aware.
+
+    q [B, H, T, hd]; k, v [B, Hkv, S, hd]. When `window` is set, each query
+    chunk only reads the KV slice it can see — compute AND memory scale
+    with the window, not S (the structural win of SWA).
+
+    gqa_expand: materialize KV per q-head first. Costs group× KV bytes
+    (transient) but keeps the whole attention shardable over H when Hkv
+    does not divide the model axis — without it GSPMD re-shards the
+    grouped [B, Hkv, G, T, hd] reshape with per-layer all-gathers
+    (measured ~40x wire-byte blowup on h2o-danube, see EXPERIMENTS.md).
+    """
+    b, h, t, hd = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    group = h // hkv
+    if gqa_expand and group > 1:
+        k = jnp.repeat(k, group, axis=1)
+        v = jnp.repeat(v, group, axis=1)
+        hkv, group = h, 1
+    bq = min(chunk, t)
+    while t % bq:       # prefix tokens can make t a non-power-of-two
+        bq //= 2
+    bq = max(bq, 1)
+    n_chunks = t // bq
+    seq_off = s - t  # end alignment
+    qg = q.reshape(b, hkv, group, t, hd)
+
+    kv_span = s if window is None else min(s, window + bq)
+
+    def one_chunk(ci):
+        q0 = ci * bq
+        qc = jax.lax.dynamic_slice_in_dim(qg, q0, bq, axis=3)
+        if window is None:
+            k0 = 0
+        else:
+            k0 = jnp.clip(q0 + seq_off + bq - kv_span, 0, s - kv_span)
+        kc = jax.lax.dynamic_slice_in_dim(k, k0, kv_span, axis=2)
+        vc = jax.lax.dynamic_slice_in_dim(v, k0, kv_span, axis=2)
+
+        logits = jnp.einsum(
+            "bkgtd,bksd->bkgts", qc.astype(jnp.float32),
+            kc.astype(jnp.float32)) * scale
+        qpos = q0 + seq_off + jnp.arange(bq)[:, None]
+        kpos = k0 + jnp.arange(kv_span)[None, :]
+        mask = jnp.ones((bq, kv_span), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        m = jnp.max(logits, axis=-1, keepdims=True)
+        p = jnp.exp(logits - m)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        o = jnp.einsum("bkgts,bksd->bkgtd", p, vc.astype(jnp.float32))
+        return (o / jnp.maximum(l, 1e-30)).astype(q.dtype)
+
+    if n_chunks == 1:
+        out = one_chunk(0)
+    else:
+        # checkpoint per chunk: the scan's backward would otherwise save
+        # every chunk's [bq, S] logits simultaneously (measured: 46 GiB/dev
+        # on a 360M model) — recomputing them caps peak temp at one chunk.
+        outs = jax.lax.map(jax.checkpoint(one_chunk), jnp.arange(n_chunks))
+        out = jnp.moveaxis(outs, 0, 3)          # [B,Hkv,G,nc,bq,hd]
+        out = out.reshape(b, hkv, group, t, hd)
+    return out.reshape(b, h, t, hd)
+
+
+def attention_inner(q, k, v, *, causal=True, window=None, scale=None,
+                    impl="chunked", chunk=256, gqa_expand=False):
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    if impl == "ref":
+        return _attn_ref(q, k, v, causal=causal, window=window, scale=scale)
+    if impl == "pallas":
+        return _attn_pallas(q, k, v, causal=causal, window=window,
+                            scale=scale)
+    return _attn_chunked(q, k, v, causal=causal, window=window, scale=scale,
+                         chunk=chunk, gqa_expand=gqa_expand)
+
+
+def _attn_cache(q, cache: KVCache, qpos0, cfg, *, causal=True, window=None):
+    """Attention of q [B, H, T, hd] against a ring-buffer cache; masking by
+    absolute slot positions (kpos, per request). Materialized [T, Smax]
+    logits — used for decode (T == 1) and small chunked-prefill steps."""
+    b, h, t, hd = q.shape
+    k, v = cache.k, cache.v
+    hkv, smax = k.shape[1], k.shape[2]
+    group = h // hkv
+    qg = q.reshape(b, hkv, group, t, hd)
+    logits = jnp.einsum("bkgtd,bksd->bkgts", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (hd ** -0.5)
+    kpos = cache.kpos[:, None, :]                    # [B, 1, Smax]
+    qpos = qpos0[:, None, None] + jnp.arange(t)[None, :, None]  # [B, T, 1]
+    mask = kpos >= 0
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window is not None:
+        mask = mask & (kpos > qpos - window)
+    logits = jnp.where(mask[:, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgts,bksd->bkgtd", p, v.astype(jnp.float32))
+    return o.reshape(b, h, t, hd).astype(q.dtype)
+
+
+def _ring_update(cache: KVCache, k_new, v_new):
+    """Write t new timesteps into the ring buffer, per-request offsets.
+    k_new [B, Hkv, t, hd]."""
+    t = k_new.shape[2]
+    smax = cache.k.shape[2]
+    pos = cache.length[:, None] + jnp.arange(t)[None, :]   # [B, t]
+    slots = pos % smax
+
+    kc = jax.vmap(lambda kb, kn, slb: kb.at[:, slb].set(
+        kn.astype(kb.dtype)))(cache.k, k_new, slots)
+    vc = jax.vmap(lambda vb, vn, slb: vb.at[:, slb].set(
+        vn.astype(vb.dtype)))(cache.v, v_new, slots)
+    kpos = jax.vmap(lambda pb, slb, pr: pb.at[slb].set(
+        pr.astype(jnp.int32)))(cache.kpos, slots, pos)
+    return KVCache(kc, vc, cache.length + t, kpos)
+
+
+# ------------------------------------------------------------- full layer
+def attention(params, x, cfg, *, positions, causal=True, window=None,
+              cache: Optional[KVCache] = None, kv_input=None,
+              mode: str = "train"):
+    """x [B, T, D]. kv_input: cross-attention source (defaults to x).
+
+    mode: "train" (no cache) | "prefill" (compute via the standard path,
+    then write the KV tail into the ring cache) | "decode" (ring update +
+    attention against the cache). Returns (out [B, T, D], new_cache|None).
+    """
+    b, t, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    src = x if kv_input is None else kv_input
+
+    q = dense(params["wq"], x).reshape(b, t, hq, hd)
+    k = dense(params["wk"], src).reshape(b, src.shape[1], hkv, hd)
+    v = dense(params["wv"], src).reshape(b, src.shape[1], hkv, hd)
+
+    if positions is not None:                   # rope (self-attention only)
+        q = rope(q, positions, cfg.rope_theta)
+        kpos = positions if cache is None else (
+            cache.length[:, None] + jnp.arange(src.shape[1])[None, :])
+        k = rope(k, kpos, cfg.rope_theta)
+
+    q = q.transpose(0, 2, 1, 3)                 # [B, H, T, hd]
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+
+    new_cache = None
+    if cache is not None and mode == "prefill":
+        # attention over the fresh k/v (memory-bounded chunked path), then
+        # persist the last Smax timesteps into the ring with correct
+        # absolute positions (older ones could never be attended again).
+        o = attention_inner(q, k, v, causal=causal, window=window,
+                            impl=cfg.attn_impl, chunk=cfg.attn_chunk,
+                            gqa_expand=cfg.gqa_expand)
+        smax = cache.k.shape[2]
+        tail = min(smax, t)
+        skipped = t - tail
+        cache_adv = cache._replace(length=cache.length + skipped)
+        new_cache = _ring_update(cache_adv, k[:, :, skipped:],
+                                 v[:, :, skipped:])
+    elif cache is not None:                     # decode / small chunk
+        new_cache = _ring_update(cache, k, v)
+        o = _attn_cache(q, new_cache, cache.length, cfg,
+                        causal=causal, window=window)
+    else:
+        o = attention_inner(q, k, v, causal=causal, window=window,
+                            impl=cfg.attn_impl, chunk=cfg.attn_chunk,
+                            gqa_expand=cfg.gqa_expand)
+
+    out = o.transpose(0, 2, 1, 3).reshape(b, t, hq * hd)
+    return dense(params["wo"], out), new_cache

@@ -1,0 +1,93 @@
+"""Hymba hybrid block — *parallel* attention + Mamba(SSD) heads per layer.
+
+Per the paper (arXiv:2411.13676): within each layer the input feeds both an
+attention branch and an SSM branch simultaneously; per-branch outputs are
+normalized and averaged before the output projection. Most layers use
+sliding-window attention; `global_layers` (first/middle/last) use full
+attention. 128 learned meta tokens are prepended to the sequence.
+
+For decode, the layer carries both a (windowed) KV cache and the O(1) SSM
+state — the combination that makes long_500k decoding sub-quadratic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import attention, init_attention
+from repro.models.layers import dense, init_dense, rmsnorm, init_rmsnorm
+from repro.models.ssm import ssd_chunked, ssd_decode_step
+
+
+def init_hymba_block(key, cfg):
+    d = cfg.d_model
+    s = cfg.ssm
+    nh = s.n_heads or d // s.head_dim
+    p_dim = s.head_dim
+    n = s.state_dim
+    dt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.param_dtype]
+    ks = jax.random.split(key, 8)
+    return {
+        "attn": init_attention(ks[0], cfg),
+        "ssm": {
+            "w_x": init_dense(ks[1], d, nh * p_dim, dt),
+            "w_z": init_dense(ks[2], d, nh * p_dim, dt),
+            "w_b": init_dense(ks[3], d, nh * n, dt),
+            "w_c": init_dense(ks[4], d, nh * n, dt),
+            "w_dt": init_dense(ks[5], d, nh, dt),
+            "dt_bias": jnp.zeros((nh,), jnp.float32),
+            "a_log": jnp.zeros((nh,), jnp.float32),
+            "d_skip": jnp.ones((nh,), jnp.float32),
+            "w_out": init_dense(ks[6], nh * p_dim, d, dt,
+                                scale=(nh * p_dim) ** -0.5
+                                / (2 * cfg.n_layers) ** 0.5),
+        },
+        "norm_attn": init_rmsnorm(d, dt),
+        "norm_ssm": init_rmsnorm(d, dt),
+    }
+
+
+def _ssm_branch(p, x, cfg, *, state=None, decode=False):
+    b, t, d = x.shape
+    s = cfg.ssm
+    nh = s.n_heads or d // s.head_dim
+    pd, n = s.head_dim, s.state_dim
+
+    xh = dense(p["w_x"], x).reshape(b, t, nh, pd)
+    z = jax.nn.silu(dense(p["w_z"], x)).reshape(b, t, nh, pd)
+    bm = dense(p["w_b"], x).reshape(b, t, nh, n)
+    cm = dense(p["w_c"], x).reshape(b, t, nh, n)
+    dt_ = jax.nn.softplus(
+        dense(p["w_dt"], x).astype(jnp.float32)
+        + p["dt_bias"][None, None])                      # [B, T, H]
+
+    if decode:
+        assert t == 1
+        y, s_new = ssd_decode_step(
+            state, xh[:, 0], dt_[:, 0], p["a_log"], bm[:, 0], cm[:, 0])
+        y = y[:, None]                                   # [B, 1, H, P]
+    else:
+        y, s_new = ssd_chunked(xh, dt_, p["a_log"], bm, cm,
+                               h0=state, chunk=s.chunk)
+
+    y = y + p["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = (y.astype(x.dtype) * z).reshape(b, t, nh * pd)
+    return dense(p["w_out"], y), s_new
+
+
+def hymba_block(p, x, cfg, *, positions, is_global: bool, cache=None,
+                ssm_state=None, mode: str = "train"):
+    """Parallel attn + SSM. is_global is a *static* bool — the stack groups
+    layers into homogeneous segments so each scan sees one attention kind
+    (global segments carry full-length caches, local ones window-sized
+    rings). Returns (out, new_kv_cache, new_ssm_state)."""
+    window = None if is_global else cfg.sliding_window
+    attn_out, new_cache = attention(p["attn"], x, cfg, positions=positions,
+                                    causal=True, window=window, cache=cache,
+                                    mode=mode)
+    ssm_out, new_state = _ssm_branch(p["ssm"], x, cfg, state=ssm_state,
+                                     decode=(mode == "decode"))
+
+    out = 0.5 * (rmsnorm(p["norm_attn"], attn_out, cfg.norm_eps)
+                 + rmsnorm(p["norm_ssm"], ssm_out, cfg.norm_eps))
+    return out, new_cache, new_state

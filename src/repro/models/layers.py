@@ -1,0 +1,98 @@
+"""Primitive layers — pure-pytree params, no framework.
+
+Parameter naming is load-bearing: distributed/sharding.py assigns mesh axes
+by matching path substrings ("wq", "experts/w_gate", "embed", ...). Keep
+names stable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+# ----------------------------------------------------------------- init
+def init_dense(key, d_in, d_out, dtype, *, scale=None, bias=False):
+    scale = scale if scale is not None else d_in ** -0.5
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+    p = {"w": w.astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def init_rmsnorm(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def init_embedding(key, vocab, d, dtype):
+    w = jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+    return {"table": w.astype(dtype)}
+
+
+# -------------------------------------------------------------- apply
+def dense(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def rmsnorm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def embed(p, tokens):
+    return p["table"][tokens]
+
+
+def swiglu(p, x):
+    """p: {'w_gate','w_up','w_out'}."""
+    g = jax.nn.silu(dense(p["w_gate"], x))
+    u = dense(p["w_up"], x)
+    return dense(p["w_out"], g * u)
+
+
+def init_swiglu(key, d, f, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": init_dense(k1, d, f, dtype),
+        "w_up": init_dense(k2, d, f, dtype),
+        "w_out": init_dense(k3, f, d, dtype, scale=f ** -0.5),
+    }
+
+
+# ----------------------------------------------------------------- rope
+def rope(x, positions, theta: float):
+    """x [..., T, H, hd]; positions [..., T] (broadcastable)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., T, half]
+    cos = jnp.cos(ang)[..., None, :]   # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def cross_entropy(logits, labels, *, z_loss: float = 0.0):
+    """logits [..., V] (any float dtype), labels int [...]. Mean loss in f32.
+    label == -100 masks the position out."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None].clip(0), axis=-1)[..., 0]
+    nll = lse - ll
+    if z_loss:
+        nll = nll + z_loss * lse ** 2
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

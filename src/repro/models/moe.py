@@ -1,0 +1,113 @@
+"""Mixture-of-Experts layer — expert-parallel, sort-based capacity dispatch.
+
+TPU-native design (no torch-style per-expert loops):
+
+  1. router top-k over E experts
+  2. flatten (token, choice) pairs, argsort by expert id
+  3. rank-within-expert via index arithmetic on the sorted ids
+  4. scatter into a dense [E, C, D] buffer (capacity C, overflow dropped —
+     the overflow count is reported as a metric, the wavefront analogy of
+     the paper's "tasks that cannot enter the current wave")
+  5. batched expert GEMMs  einsum('ecd,edf->ecf')  — experts sharded over
+     the "model" mesh axis (EP); GSPMD inserts the all-to-alls at the
+     sharding boundary between token-sharded and expert-sharded tensors
+  6. gather back + gate-weighted combine
+
+Arctic mode (dense_parallel): a dense SwiGLU runs in parallel with the MoE
+branch and the outputs add (Snowflake Arctic's dense-MoE hybrid).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, init_dense, init_swiglu, swiglu
+
+
+def init_moe(key, cfg):
+    m = cfg.moe
+    d = cfg.d_model
+    dt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.param_dtype]
+    ks = jax.random.split(key, 5)
+    e, fe = m.n_experts, m.d_expert
+
+    def expert_stack(k, d_in, d_out, scale):
+        w = jax.random.normal(k, (e, d_in, d_out), jnp.float32) * scale
+        return w.astype(dt)
+
+    p = {
+        "router": init_dense(ks[0], d, e, jnp.float32),  # router in f32
+        "experts": {
+            "w_gate": expert_stack(ks[1], d, fe, d ** -0.5),
+            "w_up": expert_stack(ks[2], d, fe, d ** -0.5),
+            "w_out": expert_stack(ks[3], fe, d, fe ** -0.5),
+        },
+    }
+    if m.dense_parallel:
+        p["dense_mlp"] = init_swiglu(ks[4], d, cfg.d_ff, dt)
+    return p
+
+
+def moe_layer(params, x, cfg):
+    """x [B, S, D] -> (y [B, S, D], aux: {load_balance_loss, router_z_loss,
+    overflow_fraction})."""
+    m = cfg.moe
+    b, s, d = x.shape
+    n = b * s
+    e, k = m.n_experts, m.top_k
+    cap = int(n * k / e * m.capacity_factor + 1)
+
+    xf = x.reshape(n, d)
+    logits = dense(params["router"], xf.astype(jnp.float32))   # [N, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, choice = jax.lax.top_k(probs, k)                    # [N, k]
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+
+    # ---- flatten (token, choice) pairs and sort by expert ----
+    flat_e = choice.reshape(-1)                                # [N·k]
+    flat_t = jnp.repeat(jnp.arange(n), k)                      # [N·k]
+    flat_g = gates.reshape(-1)
+    order = jnp.argsort(flat_e)
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+
+    # rank within expert: position - first-position-of-expert
+    counts = jnp.bincount(se, length=e)                        # [E]
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(n * k) - starts[se]
+    keep = rank < cap
+    slot = jnp.where(keep, rank, cap)                          # cap = trash
+
+    # ---- dispatch: [E, C+1, D] buffer (+1 trash row) ----
+    buf = jnp.zeros((e, cap + 1, d), x.dtype)
+    buf = buf.at[se, slot].add(xf[st].astype(x.dtype))
+    buf = buf[:, :cap]
+
+    # ---- batched expert GEMMs (EP over "model") ----
+    w = params["experts"]
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w["w_gate"]))
+    u = jnp.einsum("ecd,edf->ecf", buf, w["w_up"])
+    y = jnp.einsum("ecf,efd->ecd", g * u, w["w_out"])          # [E, C, D]
+
+    # ---- combine ----
+    contrib = y[se, jnp.where(keep, rank, 0)]                  # [N·k, D]
+    contrib = jnp.where(keep[:, None], contrib, 0.0)
+    out = jnp.zeros((n, d), y.dtype).at[st].add(
+        contrib * sg[:, None].astype(y.dtype))
+
+    # ---- aux losses / metrics ----
+    me = jnp.mean(probs, axis=0)                               # [E]
+    ce = jnp.mean(
+        jax.nn.one_hot(choice, e).sum(axis=1), axis=0)         # tokens/exp
+    load_balance = e * jnp.sum(me * ce) / k
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    overflow = 1.0 - jnp.mean(keep.astype(jnp.float32))
+
+    out = out.reshape(b, s, d).astype(x.dtype)
+    if m.dense_parallel:
+        out = out + swiglu(params["dense_mlp"], x)
+    aux = {
+        "load_balance_loss": load_balance,
+        "router_z_loss": z,
+        "overflow_fraction": overflow,
+    }
+    return out, aux

@@ -1,0 +1,177 @@
+"""RWKV6 "Finch" block (attention-free, data-dependent decay).
+
+Faithful structure per layer:
+  time-mix: token-shift lerps -> r, k, v, g projections; decay
+            w_t = exp(-exp(w0 + tanh(x_w @ A) @ B)) (the low-rank
+            data-dependent decay that defines Finch); WKV recurrence;
+            per-head groupnorm; silu(g) gate; output projection.
+  channel-mix: token-shift lerp; k = relu(x @ Wk)^2; out = (k @ Wv).
+
+Sequence mixing runs through one of:
+  * kernels/wkv6 Pallas kernel           (TPU path)
+  * wkv6_chunked_jnp below               (default lowering/dry-run path —
+    same chunked math as the kernel, scan over chunks, stable exponents)
+  * kernels/wkv6/ref.py per-step scan    (tiny tests)
+
+State is O(H·D²) per layer — long_500k decode is a constant-memory step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, init_dense
+
+DECAY_LORA = 64
+
+
+def init_rwkv_block(key, cfg):
+    d = cfg.d_model
+    dt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.param_dtype]
+    hd = cfg.hd
+    h = d // hd
+    ks = jax.random.split(key, 12)
+    lora = min(DECAY_LORA, d)
+
+    def mu(k):
+        return jax.random.uniform(k, (d,), jnp.float32).astype(dt)
+
+    return {
+        "tm": {  # time-mix
+            "mu_r": mu(ks[0]), "mu_k": mu(ks[1]), "mu_v": mu(ks[2]),
+            "mu_w": mu(ks[3]), "mu_g": mu(ks[4]),
+            "wr": init_dense(ks[5], d, d, dt),
+            "wk": init_dense(ks[6], d, d, dt),
+            "wv": init_dense(ks[7], d, d, dt),
+            "wg": init_dense(ks[8], d, d, dt),
+            "wo": init_dense(ks[9], d, d, dt, scale=d ** -0.5
+                             / (2 * cfg.n_layers) ** 0.5),
+            "w0": jnp.full((d,), -1.0, dt),     # base decay logit
+            "w_lora_a": init_dense(ks[10], d, lora, dt),
+            "w_lora_b": init_dense(ks[11], lora, d, dt,
+                                   scale=lora ** -0.5 * 0.1),
+            "u": (jax.random.normal(ks[0], (h, hd), jnp.float32) * 0.3
+                  ).astype(dt),
+            "ln_scale": jnp.ones((d,), dt),     # per-head groupnorm scale
+        },
+        "cm": {  # channel-mix
+            "mu": mu(ks[1]),
+            "wk": init_dense(ks[2], d, cfg.d_ff, dt),
+            "wv": init_dense(ks[3], cfg.d_ff, d, dt,
+                             scale=cfg.d_ff ** -0.5),
+        },
+    }
+
+
+def _token_shift(x, last=None):
+    """shift right by one along T; `last` [B, 1, D] fills position 0."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def wkv6_chunked_jnp(r, k, v, w, u, *, s0=None, chunk: int = 64):
+    """Same chunked math as the Pallas kernel, vectorized over [B, H].
+
+    r/k/v/w [B, H, T, D]; u [H, D] -> (o [B,H,T,D] f32, s [B,H,D,D] f32).
+    """
+    b, h, t, d = r.shape
+    L = min(chunk, t)
+    while t % L:
+        L //= 2
+    nc = t // L
+    rf, kf, vf, wf = (z.astype(jnp.float32) for z in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+    if s0 is None:
+        s0 = jnp.zeros((b, h, d, d), jnp.float32)
+
+    resh = lambda z: z.reshape(b, h, nc, L, d).transpose(2, 0, 1, 3, 4)
+    xs = (resh(rf), resh(kf), resh(vf), resh(wf))
+
+    tri = jnp.arange(L)[:, None] > jnp.arange(L)[None, :]
+
+    def per_chunk(S, xs_c):
+        rc, kc, vc, wc = xs_c                       # [B, H, L, D]
+        lw = jnp.log(wc)
+        s_incl = jnp.cumsum(lw, axis=2)
+        s_excl = s_incl - lw
+        q = rc * jnp.exp(s_excl)
+        o = jnp.einsum("bhld,bhde->bhle", q, S)
+        # intra: A[t,i] = Σ_d r[t,d] k[i,d] e^{s_excl[t,d]-s_incl[i,d]}
+        expd = jnp.exp(s_excl[:, :, :, None, :] - s_incl[:, :, None, :, :])
+        a = jnp.einsum("bhtd,bhid,bhtid->bhti", rc, kc, expd)
+        a = jnp.where(tri[None, None], a, 0.0)
+        diag = jnp.sum(rc * kc * uf[None, :, None, :], axis=-1)
+        o = o + jnp.einsum("bhti,bhid->bhtd", a, vc) \
+            + diag[..., None] * vc
+        tot = s_incl[:, :, -1]                      # [B, H, D]
+        k_dec = kc * jnp.exp(tot[:, :, None, :] - s_incl)
+        S = (jnp.exp(tot)[:, :, :, None] * S
+             + jnp.einsum("bhlk,bhlv->bhkv", k_dec, vc))
+        return S, o
+
+    S_fin, os_ = jax.lax.scan(per_chunk, s0, xs)
+    o = os_.transpose(1, 2, 0, 3, 4).reshape(b, h, t, d)
+    return o, S_fin
+
+
+def rwkv_time_mix(p, x, cfg, *, state=None, impl="chunked"):
+    """x [B, T, D]. state: dict(last [B,1,D], s [B,H,D,D]) for streaming.
+    Returns (out [B, T, D], new_state)."""
+    b, t, d = x.shape
+    hd = cfg.hd
+    h = d // hd
+
+    last = None if state is None else state["last"]
+    xs = _token_shift(x, last)
+
+    def mix(mu):
+        return x + (xs - x) * mu[None, None, :]
+
+    r = dense(p["wr"], mix(p["mu_r"]))
+    k = dense(p["wk"], mix(p["mu_k"]))
+    v = dense(p["wv"], mix(p["mu_v"]))
+    g = jax.nn.silu(dense(p["wg"], mix(p["mu_g"])))
+    xw = mix(p["mu_w"])
+    wlog = (p["w0"].astype(jnp.float32)[None, None]
+            + dense(p["w_lora_b"],
+                    jnp.tanh(dense(p["w_lora_a"], xw))).astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(wlog))                     # (0,1) data-dependent
+
+    split = lambda z: z.reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    rh, kh, vh, wh = split(r), split(k), split(v), split(w.astype(x.dtype))
+    u = p["u"].astype(jnp.float32)
+
+    s0 = None if state is None else state["s"]
+    if impl == "pallas":
+        from repro.kernels.wkv6.ops import wkv6
+
+        assert s0 is None, "kernel path starts from zero state"
+        o, s_fin = wkv6(rh, kh, vh, wh, u)
+    elif impl == "ref":
+        from repro.kernels.wkv6.ref import wkv6_ref
+
+        o, s_fin = wkv6_ref(rh, kh, vh, wh, u, s0=s0)
+    else:
+        o, s_fin = wkv6_chunked_jnp(rh, kh, vh, wh, u, s0=s0)
+
+    # per-head groupnorm
+    mean = jnp.mean(o, axis=-1, keepdims=True)
+    var = jnp.var(o, axis=-1, keepdims=True)
+    o = (o - mean) * jax.lax.rsqrt(var + 64e-5)
+    o = o.transpose(0, 2, 1, 3).reshape(b, t, d)
+    o = o * p["ln_scale"].astype(jnp.float32)[None, None]
+    o = o.astype(x.dtype) * g
+
+    out = dense(p["wo"], o)
+    new_state = {"last": x[:, -1:], "s": s_fin}
+    return out, new_state
+
+
+def rwkv_channel_mix(p, x, *, state=None):
+    last = None if state is None else state["last"]
+    xs = _token_shift(x, last)
+    xm = x + (xs - x) * p["mu"][None, None, :]
+    k = jnp.square(jax.nn.relu(dense(p["wk"], xm)))
+    out = dense(p["wv"], k)
+    return out, {"last": x[:, -1:]}

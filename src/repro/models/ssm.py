@@ -1,0 +1,109 @@
+"""Chunked selective-state-space machinery (Mamba2 / SSD-style), pure JAX.
+
+Recurrence per head h with state S ∈ R^{P×N}:
+
+    S_t = a_t · S_{t-1} + dt_t · x_t ⊗ B_t          (a_t = exp(-dt_t·exp(A_log)))
+    y_t = S_t · C_t + D_skip · x_t
+
+Chunked-scan formulation (the TPU-native rethink of the CUDA selective-scan
+kernel): scan over chunks of length L carrying S; within a chunk, all
+pairwise decay products are expressed through cumulative log-decays whose
+differences are <= 0, so everything is numerically safe without max-shifts:
+
+    cum_t = Σ_{j<=t} log a_j
+    intra: y[t] += Σ_{i<=t} e^{cum_t - cum_i} (C_t·B_i) dt_i x_i
+    state: y[t] += e^{cum_t} C_t · S0 ;  S' = e^{cum_L} S0 + Σ_i e^{cum_L-cum_i} dt_i x_i ⊗ B_i
+
+Used by the hymba hybrid architecture (ssm_state=16). The O(1)-state decode
+step makes long_500k tractable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_chunked(x, dt, a_log, bmat, cmat, *, h0=None, chunk: int = 256):
+    """x [B, T, H, P]; dt [B, T, H] (>0, post-softplus); a_log [H];
+    bmat, cmat [B, T, H, N]. Returns (y [B, T, H, P] f32, S [B, H, P, N])."""
+    b, t, h, p = x.shape
+    n = bmat.shape[-1]
+    L = min(chunk, t)
+    while t % L:
+        L //= 2
+    nc = t // L
+
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    bf = bmat.astype(jnp.float32)
+    cf = cmat.astype(jnp.float32)
+    loga = -dtf * jnp.exp(a_log.astype(jnp.float32))[None, None, :]  # [B,T,H]
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    else:
+        h0 = h0.astype(jnp.float32)
+
+    resh = lambda z: z.reshape(b, nc, L, *z.shape[2:]).swapaxes(0, 1)
+    xs = (resh(xf), resh(dtf), resh(bf), resh(cf), resh(loga))
+
+    def per_chunk(S, xs_c):
+        xc, dtc, bc, cc, lac = xs_c          # [B, L, ...]
+        cum = jnp.cumsum(lac, axis=1)        # [B, L, H] decreasing
+        # intra-chunk: y[t] = Σ_{i<=t} e^{cum_t-cum_i} (C_t·B_i) dt_i x_i
+        g = jnp.einsum("bthn,bihn->btih", cc, bc)          # [B, L, L, H]
+        m = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])
+        tri = (jnp.arange(L)[:, None] >= jnp.arange(L)[None, :])
+        w = jnp.where(tri[None, :, :, None], m * g, 0.0)
+        y = jnp.einsum("btih,bih,bihp->bthp", w, dtc, xc)
+        # state term
+        y = y + jnp.einsum("bthn,bth,bhpn->bthp", cc, jnp.exp(cum), S)
+        # state update
+        tot = cum[:, -1]                                    # [B, H]
+        decay_i = jnp.exp(tot[:, None, :] - cum)            # [B, L, H]
+        S_new = (jnp.exp(tot)[:, :, None, None] * S
+                 + jnp.einsum("blh,blh,blhp,blhn->bhpn",
+                              decay_i, dtc, xc, bc))
+        return S_new, y
+
+    S_fin, ys = jax.lax.scan(per_chunk, h0, xs)
+    y = ys.swapaxes(0, 1).reshape(b, t, h, p)
+    return y, S_fin
+
+
+def ssd_ref(x, dt, a_log, bmat, cmat, *, h0=None):
+    """Naive per-step scan oracle."""
+    b, t, h, p = x.shape
+    n = bmat.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+
+    a = jnp.exp(-dt.astype(jnp.float32)
+                * jnp.exp(a_log.astype(jnp.float32))[None, None, :])
+
+    def step(S, xs):
+        xt, dtt, bt, ct, at = xs
+        S = at[:, :, None, None] * S + jnp.einsum(
+            "bh,bhp,bhn->bhpn", dtt, xt, bt)
+        y = jnp.einsum("bhpn,bhn->bhp", S, ct)
+        return S, y
+
+    xs = (x.astype(jnp.float32).swapaxes(0, 1),
+          dt.astype(jnp.float32).swapaxes(0, 1),
+          bmat.astype(jnp.float32).swapaxes(0, 1),
+          cmat.astype(jnp.float32).swapaxes(0, 1),
+          a.swapaxes(0, 1))
+    S_fin, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1), S_fin
+
+
+def ssd_decode_step(S, x, dt, a_log, bmat, cmat):
+    """One-token step. x [B, H, P]; dt [B, H]; bmat/cmat [B, H, N];
+    S [B, H, P, N]. Returns (y [B, H, P], S')."""
+    a = jnp.exp(-dt.astype(jnp.float32)
+                * jnp.exp(a_log.astype(jnp.float32))[None, :])
+    S = (a[:, :, None, None] * S.astype(jnp.float32)
+         + jnp.einsum("bh,bhp,bhn->bhpn", dt.astype(jnp.float32),
+                      x.astype(jnp.float32), bmat.astype(jnp.float32)))
+    y = jnp.einsum("bhpn,bhn->bhp", S, cmat.astype(jnp.float32))
+    return y, S

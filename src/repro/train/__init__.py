@@ -1,0 +1,12 @@
+from repro.train.optim import AdamWConfig, adamw_init, adamw_update
+from repro.train.schedule import cosine_schedule
+from repro.train.step import make_train_step, TrainState
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "cosine_schedule",
+    "make_train_step",
+    "TrainState",
+]

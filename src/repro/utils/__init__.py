@@ -1,0 +1,10 @@
+from repro.utils.pytree import tree_bytes, tree_param_count, tree_map_with_path_str
+from repro.utils.timing import Timer, median_time
+
+__all__ = [
+    "tree_bytes",
+    "tree_param_count",
+    "tree_map_with_path_str",
+    "Timer",
+    "median_time",
+]

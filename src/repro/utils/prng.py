@@ -1,0 +1,22 @@
+"""PRNG stream discipline.
+
+The paper's creation/execution depth split binds all randomness to a task at
+*creation* time. We realize that by deriving a per-task key from a base key and
+the task's global chain index — so the realized randomness is a pure function of
+(seed, task index) and can never depend on execution order. This is what makes
+wavefront execution bit-identical to sequential execution.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def task_key(base_key: jax.Array, task_index: jax.Array) -> jax.Array:
+    """Key for one task; task_index may be any integer array (vmappable)."""
+    return jax.random.fold_in(base_key, task_index)
+
+
+def task_keys(base_key: jax.Array, task_indices: jax.Array) -> jax.Array:
+    """Vectorized task keys for a window of task indices [W] -> [W] keys."""
+    return jax.vmap(lambda i: jax.random.fold_in(base_key, i))(task_indices)

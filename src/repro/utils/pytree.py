@@ -1,0 +1,43 @@
+"""Pytree helpers used across the framework (no flax — pure JAX pytrees)."""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+
+def tree_param_count(tree: Any) -> int:
+    """Total number of scalar elements in a pytree of arrays/ShapeDtypeStructs."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return int(sum(int(np.prod(l.shape)) for l in leaves))
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total bytes of a pytree of arrays/ShapeDtypeStructs."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    total = 0
+    for l in leaves:
+        itemsize = np.dtype(l.dtype).itemsize
+        total += int(np.prod(l.shape)) * itemsize
+    return total
+
+
+def tree_map_with_path_str(fn: Callable[[str, Any], Any], tree: Any) -> Any:
+    """tree_map where fn receives a '/'-joined string path — used by the
+    logical-axis sharding rules to match parameter names."""
+
+    def _fn(path, leaf):
+        parts = []
+        for p in path:
+            if isinstance(p, jax.tree_util.DictKey):
+                parts.append(str(p.key))
+            elif isinstance(p, jax.tree_util.SequenceKey):
+                parts.append(str(p.idx))
+            elif isinstance(p, jax.tree_util.GetAttrKey):
+                parts.append(str(p.name))
+            else:
+                parts.append(str(p))
+        return fn("/".join(parts), leaf)
+
+    return jax.tree_util.tree_map_with_path(_fn, tree)

@@ -1,0 +1,31 @@
+"""Wall-clock timing helpers for calibration and benchmarks."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.elapsed = time.perf_counter() - self.t0
+
+
+def median_time(fn: Callable[[], object], repeats: int = 5, warmup: int = 2) -> float:
+    """Median wall time of fn() in seconds; blocks on JAX async dispatch."""
+    for _ in range(warmup):
+        out = fn()
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]

@@ -1,0 +1,10 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS device-count override here — smoke
+tests and benches must see the real single CPU device; only the dry-run
+(and the subprocess-based sharding tests) force placeholder devices."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.key(0)

@@ -1,0 +1,113 @@
+"""Core protocol: wavefront scheduling semantics + the paper-rule gap."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ProtocolConfig,
+    prefix_conflicts,
+    run_oracle,
+    run_wavefront,
+    wave_levels,
+    wave_levels_capped,
+)
+from repro.mabs.axelrod import AxelrodConfig, AxelrodModel
+from repro.mabs.sir import SIRConfig, SIRModel
+
+
+def test_wave_levels_chain():
+    # fully serial chain: levels must be 0..n-1
+    n = 8
+    conf = jnp.tril(jnp.ones((n, n), bool), k=-1)
+    lv = wave_levels(conf, jnp.ones(n, bool))
+    assert list(np.asarray(lv)) == list(range(n))
+
+
+def test_wave_levels_independent():
+    n = 8
+    conf = jnp.zeros((n, n), bool)
+    lv = wave_levels(conf, jnp.ones(n, bool))
+    assert list(np.asarray(lv)) == [0] * n
+
+
+def test_wave_levels_respect_dependencies():
+    rng = np.random.RandomState(0)
+    for _ in range(20):
+        n = 32
+        conf = np.tril(rng.rand(n, n) < 0.15, k=-1)
+        lv = np.asarray(wave_levels(jnp.asarray(conf), jnp.ones(n, bool)))
+        for i in range(n):
+            for j in range(i):
+                if conf[i, j]:
+                    assert lv[i] > lv[j]
+
+
+def test_wave_levels_capped_capacity():
+    n = 16
+    conf = np.zeros((n, n), bool)
+    lv = wave_levels_capped(conf, np.ones(n, bool), n_workers=4)
+    counts = np.bincount(lv)
+    assert counts.max() <= 4
+    assert lv.max() == 3  # 16 independent tasks, 4 per wave
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_axelrod_wavefront_equals_sequential(seed):
+    m = AxelrodModel(AxelrodConfig(n_agents=50, n_features=4, q=3))
+    st0 = m.init_state(jax.random.key(seed))
+    cfg = ProtocolConfig(window=64, strict=True)
+    st_w, _ = run_wavefront(m, st0, 400, seed=seed, config=cfg)
+    st_s = run_oracle(m, st0, 400, seed=seed, config=cfg)
+    assert bool(jnp.all(st_w["traits"] == st_s["traits"]))
+
+
+def test_axelrod_paper_rule_diverges():
+    """The record rule exactly as stated in the paper misses the
+    anti-dependence tgt_i == src_j; with enough conflicts it must diverge
+    from sequential execution (DESIGN.md §10 / §2)."""
+    m = AxelrodModel(AxelrodConfig(n_agents=12, n_features=4, q=2))
+    st0 = m.init_state(jax.random.key(1))
+    diverged = False
+    for seed in range(6):
+        st_p, _ = run_wavefront(m, st0, 400, seed=seed,
+                                config=ProtocolConfig(window=64,
+                                                      strict=False))
+        st_s = run_oracle(m, st0, 400, seed=seed,
+                          config=ProtocolConfig(window=64))
+        if not bool(jnp.all(st_p["traits"] == st_s["traits"])):
+            diverged = True
+            break
+    assert diverged, "paper rule unexpectedly matched sequential on all seeds"
+
+
+@pytest.mark.parametrize("subset_size", [5, 10])
+def test_sir_wavefront_equals_sequential(subset_size):
+    m = SIRModel(SIRConfig(n_agents=100, k=6, subset_size=subset_size,
+                           i0=0.3))
+    st0 = m.init_state(jax.random.key(2))
+    tasks = m.cfg.tasks_per_step() * 5
+    cfg = ProtocolConfig(window=40, strict=True)
+    st_w, _ = run_wavefront(m, st0, tasks, seed=3, config=cfg)
+    st_s = run_oracle(m, st0, tasks, seed=3, config=cfg)
+    assert bool(jnp.all(st_w["states"] == st_s["states"]))
+    assert bool(jnp.all(st_w["new_states"] == st_s["new_states"]))
+
+
+def test_sir_states_valid():
+    m = SIRModel(SIRConfig(n_agents=100, k=6, subset_size=10, i0=0.3))
+    st0 = m.init_state(jax.random.key(2))
+    st, _ = run_wavefront(m, st0, m.cfg.tasks_per_step() * 10, seed=0,
+                          config=ProtocolConfig(window=40))
+    s = np.asarray(st["states"])
+    assert set(np.unique(s)).issubset({0, 1, 2})
+
+
+def test_prefix_conflicts_masks_invalid():
+    m = AxelrodModel(AxelrodConfig(n_agents=10, n_features=2))
+    rec = m.create_tasks(jax.random.key(0), 0, 16)
+    valid = jnp.arange(16) < 10
+    conf = prefix_conflicts(m.conflicts, rec, valid)
+    c = np.asarray(conf)
+    assert not c[10:].any() and not c[:, 10:].any()
+    assert not np.triu(c).any()

@@ -1,0 +1,172 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+rng = np.random.RandomState(7)
+
+
+# ---------------------------------------------------------------- conflict
+@pytest.mark.parametrize("w", [128, 256, 512])
+@pytest.mark.parametrize("strict", [True, False])
+def test_conflict_sweep(w, strict):
+    from repro.kernels.conflict.ops import conflict_matrix
+    from repro.kernels.conflict.ref import conflict_matrix_ref
+
+    reads = rng.randint(0, 60, size=(w, 2)).astype(np.int32)
+    writes = reads[:, 1:].copy()
+    valid = np.ones(w, bool)
+    valid[-3:] = False
+    out = conflict_matrix(reads, writes, valid, strict=strict)
+    ref = conflict_matrix_ref(jnp.asarray(reads), jnp.asarray(writes),
+                              jnp.asarray(valid), strict=strict)
+    assert bool(jnp.all(out == ref))
+
+
+# ---------------------------------------------------------------- axelrod
+@pytest.mark.parametrize("w,f", [(128, 3), (128, 100), (256, 500), (128, 128)])
+def test_axelrod_kernel_sweep(w, f):
+    from repro.kernels.axelrod.ops import axelrod_wave
+    from repro.kernels.axelrod.ref import axelrod_wave_ref
+
+    s = rng.randint(0, 5, (w, f)).astype(np.int32)
+    t = rng.randint(0, 5, (w, f)).astype(np.int32)
+    u = rng.rand(w).astype(np.float32)
+    g = rng.rand(w, f).astype(np.float32)
+    m = rng.rand(w) < 0.7
+    new_t, inter = axelrod_wave(jnp.asarray(s), jnp.asarray(t),
+                                jnp.asarray(u), jnp.asarray(g),
+                                jnp.asarray(m), omega=0.95)
+    fp = max(128, -(-f // 128) * 128)
+    pad = lambda x: jnp.pad(jnp.asarray(x), [(0, 0), (0, fp - f)])
+    rt, ri = axelrod_wave_ref(pad(s), pad(t), jnp.asarray(u), pad(g),
+                              jnp.asarray(m), omega=0.95, n_features=f)
+    assert bool(jnp.all(new_t == rt[:, :f]))
+    assert bool(jnp.all(inter == ri))
+
+
+# -------------------------------------------------------------------- sir
+@pytest.mark.parametrize("w,s_sz,k", [(8, 50, 14), (16, 10, 6), (8, 400, 14),
+                                      (32, 25, 2)])
+def test_sir_kernel_sweep(w, s_sz, k):
+    from repro.kernels.sir.ops import sir_wave
+    from repro.kernels.sir.ref import sir_wave_ref
+
+    n = 4000
+    states = rng.randint(0, 3, n).astype(np.int32)
+    subsets = rng.randint(0, n // s_sz, w).astype(np.int32)
+    u = rng.rand(w, s_sz).astype(np.float32)
+    out = sir_wave(jnp.asarray(states), jnp.asarray(subsets),
+                   jnp.asarray(u), n_agents=n, k=k, subset_size=s_sz,
+                   p_si=.8, p_ir=.1, p_rs=.3)
+    half = k // 2
+    idx = (subsets[:, None] * s_sz - half
+           + np.arange(s_sz + 2 * half)[None, :]) % n
+    ref = sir_wave_ref(jnp.asarray(states[idx]), jnp.asarray(u), k=k,
+                       subset_size=s_sz, p_si=.8, p_ir=.1, p_rs=.3)
+    assert bool(jnp.all(out == ref))
+
+
+# ------------------------------------------------------------------- flash
+@pytest.mark.parametrize("b,h,hkv,t,s,d,causal,window", [
+    (2, 4, 2, 128, 128, 64, True, None),
+    (1, 8, 2, 128, 256, 64, True, None),
+    (2, 4, 2, 256, 256, 64, True, 128),
+    (1, 2, 1, 128, 128, 128, False, None),
+    (1, 4, 4, 256, 256, 32, True, 64),
+])
+def test_flash_sweep(b, h, hkv, t, s, d, causal, window):
+    from repro.kernels.flash.ops import flash_attention
+    from repro.kernels.flash.ref import attention_ref
+
+    q = jnp.asarray(rng.randn(b, h, t, d).astype(np.float32) * 0.3)
+    k = jnp.asarray(rng.randn(b, hkv, s, d).astype(np.float32) * 0.3)
+    v = jnp.asarray(rng.randn(b, hkv, s, d).astype(np.float32) * 0.3)
+    out = flash_attention(q, k, v, causal=causal, window=window)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_flash_bf16():
+    from repro.kernels.flash.ops import flash_attention
+    from repro.kernels.flash.ref import attention_ref
+
+    q = jnp.asarray(rng.randn(1, 4, 128, 64).astype(np.float32) * 0.3
+                    ).astype(jnp.bfloat16)
+    k = jnp.asarray(rng.randn(1, 2, 128, 64).astype(np.float32) * 0.3
+                    ).astype(jnp.bfloat16)
+    v = jnp.asarray(rng.randn(1, 2, 128, 64).astype(np.float32) * 0.3
+                    ).astype(jnp.bfloat16)
+    out = flash_attention(q, k, v, causal=True)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=0.05)
+
+
+# -------------------------------------------------------------------- wkv6
+@pytest.mark.parametrize("b,h,t,d", [(1, 2, 128, 64), (2, 3, 256, 64),
+                                     (1, 1, 64, 128), (1, 2, 32, 64)])
+def test_wkv6_sweep(b, h, t, d):
+    from repro.kernels.wkv6.ops import wkv6
+    from repro.kernels.wkv6.ref import wkv6_ref
+
+    f = lambda *sh: jnp.asarray(rng.randn(*sh).astype(np.float32) * 0.4)
+    r, k, v = f(b, h, t, d), f(b, h, t, d), f(b, h, t, d)
+    w = jnp.exp(-jnp.exp(f(b, h, t, d)))
+    u = f(h, d)
+    o, sf = wkv6(r, k, v, w, u)
+    oref, sref = wkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(oref), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(sf), np.asarray(sref), atol=1e-3)
+
+
+def test_wkv6_chunked_jnp_matches_ref():
+    from repro.kernels.wkv6.ref import wkv6_ref
+    from repro.models.rwkv6 import wkv6_chunked_jnp
+
+    b, h, t, d = 2, 2, 96, 32
+    f = lambda *sh: jnp.asarray(rng.randn(*sh).astype(np.float32) * 0.4)
+    r, k, v = f(b, h, t, d), f(b, h, t, d), f(b, h, t, d)
+    w = jnp.exp(-jnp.exp(f(b, h, t, d)))
+    u = f(h, d)
+    s0 = f(b, h, d, d) * 0.1
+    o, sf = wkv6_chunked_jnp(r, k, v, w, u, s0=s0, chunk=32)
+    oref, sref = wkv6_ref(r, k, v, w, u, s0=s0)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(oref), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(sf), np.asarray(sref), atol=1e-3)
+
+
+# --------------------------------------------------------------------- ssd
+def test_ssd_chunked_matches_ref():
+    from repro.models.ssm import ssd_chunked, ssd_ref
+
+    b, t, h, p, n = 2, 96, 3, 16, 8
+    f = lambda *sh: jnp.asarray(rng.randn(*sh).astype(np.float32) * 0.4)
+    x = f(b, t, h, p)
+    dt = jnp.abs(f(b, t, h)) + 0.1
+    a_log = f(h) * 0.2
+    bm, cm = f(b, t, h, n), f(b, t, h, n)
+    h0 = f(b, h, p, n) * 0.1
+    y, s = ssd_chunked(x, dt, a_log, bm, cm, h0=h0, chunk=32)
+    yr, sr = ssd_ref(x, dt, a_log, bm, cm, h0=h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-3)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), atol=2e-3)
+
+
+def test_ssd_decode_step_matches_ref():
+    from repro.models.ssm import ssd_decode_step, ssd_ref
+
+    b, h, p, n = 2, 3, 16, 8
+    f = lambda *sh: jnp.asarray(rng.randn(*sh).astype(np.float32) * 0.4)
+    x = f(b, 1, h, p)
+    dt = jnp.abs(f(b, 1, h)) + 0.1
+    a_log = f(h) * 0.2
+    bm, cm = f(b, 1, h, n), f(b, 1, h, n)
+    h0 = f(b, h, p, n) * 0.1
+    yr, sr = ssd_ref(x, dt, a_log, bm, cm, h0=h0)
+    y, s = ssd_decode_step(h0, x[:, 0], dt[:, 0], a_log, bm[:, 0], cm[:, 0])
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr[:, 0]),
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), atol=2e-4)

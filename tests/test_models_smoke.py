@@ -1,0 +1,163 @@
+"""Per-architecture smoke tests: reduced configs, one forward/train step on
+CPU, asserting output shapes and no NaNs (assignment requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models.api import build_model
+
+ALL_ARCHS = sorted(ARCHS)
+
+
+def _batch(cfg, b=2, t=32):
+    batch = {"tokens": jnp.ones((b, t), jnp.int32),
+             "labels": jax.random.randint(jax.random.key(1), (b, t), 0,
+                                          cfg.vocab)}
+    if cfg.frontend == "vision_stub":
+        batch["patch_embeds"] = 0.1 * jax.random.normal(
+            jax.random.key(2), (b, 8, cfg.d_model))
+    if cfg.is_encdec:
+        batch["src_embeds"] = 0.1 * jax.random.normal(
+            jax.random.key(3), (b, t, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_train_step_shapes_and_finite(arch):
+    cfg = ARCHS[arch].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = _batch(cfg)
+    logits, _ = jax.jit(model.apply_train)(params, batch)
+    assert logits.shape == (2, batch["tokens"].shape[1], cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    loss, metrics = jax.jit(model.loss)(params, batch)
+    assert bool(jnp.isfinite(loss))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_grads_finite(arch):
+    cfg = ARCHS[arch].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = _batch(cfg, b=1, t=16)
+    (loss, _), grads = jax.jit(jax.value_and_grad(
+        model.loss, has_aux=True))(params, batch)
+    leaves = jax.tree_util.tree_leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(l))) for l in leaves)
+    gn = sum(float(jnp.sum(jnp.abs(l))) for l in leaves)
+    assert gn > 0.0
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "h2o-danube-3-4b",
+                                  "qwen1.5-32b", "deepseek-7b", "rwkv6-3b",
+                                  "hymba-1.5b", "arctic-480b",
+                                  "qwen3-moe-235b-a22b",
+                                  "seamless-m4t-medium", "internvl2-76b"])
+def test_prefill_decode_consistent_with_train(arch):
+    """Serving path must match teacher-forced logits position by position."""
+    cfg = ARCHS[arch].reduced()
+    if cfg.moe is not None:
+        # dropless capacity: capacity-overflow drops depend on the token
+        # count, which differs between the teacher-forced and decode paths;
+        # the equivalence check requires no drops on either side.
+        import dataclasses
+
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe,
+                                                  capacity_factor=8.0))
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    b, t = 1, 12
+    toks = jax.random.randint(jax.random.key(5), (b, t), 0, cfg.vocab)
+    batch = {"tokens": toks}
+    tb = {"tokens": toks, "labels": toks}
+    if cfg.is_encdec:
+        se = 0.1 * jax.random.normal(jax.random.key(6), (b, t, cfg.d_model))
+        batch["src_embeds"] = se
+        tb["src_embeds"] = se
+    if cfg.frontend == "vision_stub":
+        pe = 0.1 * jax.random.normal(jax.random.key(7), (b, 8, cfg.d_model))
+        batch["patch_embeds"] = pe
+        tb["patch_embeds"] = pe
+    lt, _ = jax.jit(model.apply_train)(params, tb)
+    bp = dict(batch)
+    bp["tokens"] = toks[:, :t - 1]
+    states = model.init_states(b, max_len=t + 16)
+    lp, states = jax.jit(model.prefill)(params, bp, states)
+    ld, states = jax.jit(model.decode_step)(
+        params, toks[:, t - 1:t], states)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(lt[:, t - 2]),
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(ld), np.asarray(lt[:, t - 1]),
+                               atol=2e-4)
+
+
+def test_sliding_window_ring_cache_long_decode():
+    """Decode far past the window: ring cache must equal a full cache
+    because SWA masks out everything older than the window anyway."""
+    cfg = ARCHS["h2o-danube-3-4b"].reduced()  # window 64 after reduction
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(4), (1, 8), 0, cfg.vocab)
+
+    def rollout(max_len):
+        states = model.init_states(1, max_len=max_len)
+        lp, states = jax.jit(model.prefill)(
+            params, {"tokens": toks}, states)
+        out = [int(jnp.argmax(lp[0]))]
+        for _ in range(90):  # well past window=64
+            ld, states = jax.jit(model.decode_step)(
+                params, jnp.asarray([[out[-1]]], jnp.int32), states)
+            out.append(int(jnp.argmax(ld[0])))
+        return out
+
+    ring = rollout(max_len=cfg.sliding_window)      # ring wraps
+    full = rollout(max_len=512)                     # never wraps
+    assert ring == full
+
+
+def test_param_count_analytic_close_to_actual():
+    from repro.utils.pytree import tree_param_count
+
+    for arch in ["smollm-360m", "deepseek-7b"]:
+        cfg = ARCHS[arch]
+        model = build_model(cfg)
+        shapes = jax.eval_shape(model.init, jax.random.key(0))
+        actual = tree_param_count(shapes)
+        analytic = cfg.n_params()
+        assert abs(actual - analytic) / actual < 0.02, (arch, actual,
+                                                        analytic)
+
+
+def test_fp8_kv_cache_bounded_perturbation():
+    """fp8(e4m3) KV cache: teacher-forced decode logits stay within the
+    expected quantization noise (~e4m3 mantissa resolution, rmse <~7% of
+    logit std on a random-init model; trained models tolerate this —
+    standard KV-quantization practice). Halves decode cache memory."""
+    cfg = ARCHS["h2o-danube-3-4b"].reduced()
+    toks = jax.random.randint(jax.random.key(4), (1, 24), 0, cfg.vocab)
+    forced = jax.random.randint(jax.random.key(9), (8,), 0, cfg.vocab)
+
+    def rollout(c):
+        m = build_model(c)
+        params = m.init(jax.random.key(0))
+        states = m.init_states(1, max_len=64)
+        lp, states = jax.jit(m.prefill)(params, {"tokens": toks}, states)
+        logits = [lp]
+        for t in forced:
+            ld, states = jax.jit(m.decode_step)(
+                params, jnp.asarray([[t]], jnp.int32), states)
+            logits.append(ld)
+        return jnp.stack(logits)
+
+    a = rollout(cfg)
+    b = rollout(cfg.replace(kv_cache_dtype="float8_e4m3fn"))
+    scale = float(jnp.std(a))
+    rmse = float(jnp.sqrt(jnp.mean((a - b) ** 2))) / scale
+    assert rmse < 0.12, rmse
+    # and the cache is actually fp8
+    m = build_model(cfg.replace(kv_cache_dtype="float8_e4m3fn"))
+    st = m.init_states(1, max_len=32)
+    assert st["segs"][0]["kv"].k.dtype == jnp.float8_e4m3fn

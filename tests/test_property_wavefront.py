@@ -1,0 +1,76 @@
+"""Property-based tests (hypothesis): the scheduler's core invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ProtocolConfig, run_oracle, run_wavefront, wave_levels
+from repro.core.records import wave_levels_capped
+from repro.kernels.conflict.ref import conflict_matrix_ref
+from repro.mabs.axelrod import AxelrodConfig, AxelrodModel
+
+
+@st.composite
+def conflict_matrices(draw):
+    n = draw(st.integers(4, 24))
+    density = draw(st.floats(0.0, 0.5))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.RandomState(seed)
+    conf = np.tril(rng.rand(n, n) < density, k=-1)
+    return conf
+
+
+@given(conflict_matrices())
+@settings(max_examples=50, deadline=None)
+def test_levels_topological(conf):
+    n = conf.shape[0]
+    lv = np.asarray(wave_levels(jnp.asarray(conf), jnp.ones(n, bool)))
+    ii, jj = np.nonzero(conf)
+    assert (lv[ii] > lv[jj]).all()
+    # level k > 0 implies a conflicting predecessor at level k-1 (greedy
+    # tightness: no task is scheduled later than necessary)
+    for i in range(n):
+        if lv[i] > 0:
+            deps = np.nonzero(conf[i])[0]
+            assert lv[deps].max() == lv[i] - 1
+
+
+@given(conflict_matrices(), st.integers(1, 5))
+@settings(max_examples=30, deadline=None)
+def test_capped_levels_valid(conf, n_workers):
+    n = conf.shape[0]
+    lv = wave_levels_capped(conf, np.ones(n, bool), n_workers)
+    ii, jj = np.nonzero(conf)
+    assert (lv[ii] > lv[jj]).all()
+    assert np.bincount(lv).max() <= n_workers
+
+
+@given(st.integers(0, 2**16), st.integers(8, 40), st.integers(2, 6),
+       st.integers(10, 60))
+@settings(max_examples=15, deadline=None)
+def test_axelrod_wavefront_bitexact(seed, n_agents, n_features, n_tasks):
+    """For arbitrary model sizes and task counts, wavefront == sequential."""
+    m = AxelrodModel(AxelrodConfig(n_agents=n_agents, n_features=n_features,
+                                   q=3))
+    st0 = m.init_state(jax.random.key(seed))
+    cfg = ProtocolConfig(window=32, strict=True)
+    w, _ = run_wavefront(m, st0, n_tasks, seed=seed, config=cfg)
+    s = run_oracle(m, st0, n_tasks, seed=seed, config=cfg)
+    assert bool(jnp.all(w["traits"] == s["traits"]))
+
+
+@given(st.integers(0, 10_000), st.integers(2, 24))
+@settings(max_examples=20, deadline=None)
+def test_conflict_kernel_matches_ref(seed, n_ids):
+    from repro.kernels.conflict.ops import conflict_matrix
+
+    rng = np.random.RandomState(seed)
+    w = 128
+    reads = rng.randint(0, n_ids, size=(w, 2)).astype(np.int32)
+    writes = reads[:, 1:].copy()
+    valid = rng.rand(w) < 0.9
+    for strict in (True, False):
+        out = conflict_matrix(reads, writes, valid, strict=strict)
+        ref = conflict_matrix_ref(jnp.asarray(reads), jnp.asarray(writes),
+                                  jnp.asarray(valid), strict=strict)
+        assert bool(jnp.all(out == ref))
