@@ -1,0 +1,143 @@
+"""Topology sweep: wave parallelism and scheduling overhead vs network
+structure, across the contact-topology subsystem's scenario matrix.
+
+For each topology family x model (voter, SIS, SIRS) x window size:
+
+  * mean wave parallelism (tasks / waves) and conflict density from
+    ``window_schedule_stats`` — how much concurrency the record check
+    exposes on that graph;
+  * scheduling overhead: median wall time of the jitted conflict-matrix +
+    wave-level pass (the protocol's O(W^2) term) per window.
+
+Emits BENCH_topology.json next to this file (or --out PATH):
+
+  {"meta": {...}, "rows": [{"model", "topology", "window", "n_tasks",
+   "n_waves", "mean_parallelism", "conflict_density", "sched_seconds",
+   "max_degree", "n_edges"}, ...]}
+
+Run:  PYTHONPATH=src python benchmarks/topology_sweep.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.records import wave_levels, window_conflicts
+from repro.core.wavefront import window_schedule_stats
+from repro.mabs.sir import SIRConfig, SIRModel
+from repro.mabs.sis import SISModel
+from repro.mabs.voter import VoterModel
+from repro.topology import (
+    barabasi_albert,
+    connect_isolated,
+    erdos_renyi,
+    lattice2d,
+    ring,
+    watts_strogatz,
+)
+from repro.utils.timing import median_time
+
+
+def topologies(n: int, key):
+    """The benchmark's graph family matrix (all on n nodes)."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    side = int(n ** 0.5)
+    assert side * side == n, "n must be a perfect square for the lattice"
+    return {
+        "ring_k4": ring(n, 4),
+        "lattice_vn": lattice2d(side, side, neighborhood="von_neumann"),
+        "lattice_moore": lattice2d(side, side, neighborhood="moore"),
+        "watts_strogatz": watts_strogatz(n, 4, 0.1, k1),
+        # low-p ER leaves isolated nodes, which voter/Axelrod reject
+        "erdos_renyi": connect_isolated(erdos_renyi(n, 4.0 / n, k2), k4),
+        "barabasi_albert": barabasi_albert(n, 2, k3),
+    }
+
+
+def models_for(topo, n: int):
+    sir_cfg = SIRConfig(n_agents=n, k=4, subset_size=max(4, n // 64))
+    return {
+        "voter": VoterModel(topo),
+        "sis": SISModel(topo),
+        "sirs": SIRModel(sir_cfg, topology=topo),
+    }
+
+
+def bench_one(model, window: int, *, strict: bool = True, seed: int = 0):
+    recipes = model.create_tasks(jax.random.key(seed), 0, window)
+    valid = jnp.ones((window,), dtype=bool)
+    stats = window_schedule_stats(model, recipes, valid, strict=strict)
+
+    @jax.jit
+    def schedule(recipes, valid):
+        conf = window_conflicts(model, recipes, valid, strict=strict)
+        return wave_levels(conf, valid)
+
+    sched_s = median_time(lambda: schedule(recipes, valid),
+                          repeats=5, warmup=2)
+    return {
+        "n_tasks": stats["n_tasks"],
+        "n_waves": stats["n_waves"],
+        "mean_parallelism": stats["mean_parallelism"],
+        "conflict_density": stats["conflict_density"],
+        "sched_seconds": float(sched_s),
+    }
+
+
+def run(n: int, windows, *, seed: int = 0):
+    rows = []
+    topos = topologies(n, jax.random.key(seed))
+    for tname, topo in topos.items():
+        for mname, model in models_for(topo, n).items():
+            for w in windows:
+                r = bench_one(model, w, seed=seed)
+                r.update({
+                    "model": mname,
+                    "topology": tname,
+                    "window": int(w),
+                    "max_degree": int(topo.max_degree),
+                    "n_edges": int(topo.n_edges),
+                })
+                rows.append(r)
+                print(f"{mname:6s} {tname:16s} W={w:5d} "
+                      f"waves={r['n_waves']:4d} "
+                      f"par={r['mean_parallelism']:7.2f} "
+                      f"sched={r['sched_seconds']*1e3:7.2f}ms")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=1024, help="nodes (square)")
+    ap.add_argument("--windows", type=int, nargs="+",
+                    default=[64, 256, 1024])
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_topology.json"))
+    args = ap.parse_args()
+    n, windows = args.n, args.windows
+    if args.quick:
+        n, windows = 256, [64, 256]
+
+    rows = run(n, windows)
+    payload = {
+        "meta": {
+            "n_nodes": n,
+            "windows": [int(w) for w in windows],
+            "backend": jax.default_backend(),
+            "strict": True,
+        },
+        "rows": rows,
+    }
+    out = os.path.abspath(args.out)
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {out} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

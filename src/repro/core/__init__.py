@@ -7,7 +7,7 @@
   workersim.py  — paper-faithful n-worker discrete-event simulator
   protocol.py   — high-level API
 """
-from repro.core.model import MABSModel
+from repro.core.model import MABSModel, footprint_conflicts
 from repro.core.protocol import (
     ProtocolConfig,
     run_oracle,
@@ -19,12 +19,15 @@ from repro.core.records import (
     prefix_conflicts,
     wave_levels,
     wave_levels_capped,
+    window_conflicts,
 )
 from repro.core.wavefront import WavefrontRunner, execute_window, run_sequential
 from repro.core.workersim import DESCosts, DESModel, DESResult, ProtocolSimulator
 
 __all__ = [
     "MABSModel",
+    "footprint_conflicts",
+    "window_conflicts",
     "ProtocolConfig",
     "run_oracle",
     "run_wavefront",

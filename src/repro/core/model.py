@@ -19,10 +19,22 @@ Two conflict rules are exposed:
   * ``strict=True``  (default) — full dependence closure: flow (RAW) +
     anti (WAR) + output (WAW) hazards. Guarantees bit-exact equivalence
     with sequential execution (property-tested).
-  * ``strict=False`` — the rule exactly as stated in the paper, which
-    covers flow+output hazards but omits anti-dependences (see DESIGN.md
-    §10: for Axelrod the paper's record rule misses ``tgt_i == src_j``).
+  * ``strict=False`` — the rule exactly as stated in the paper: the record
+    accumulates the *write* sets of skipped tasks and tests the task at
+    hand's *read* set against them (flow hazards). It omits
+    anti-dependences (see DESIGN.md §10: for Axelrod the paper's record
+    rule misses ``tgt_i == src_j``) and standalone output hazards.
     Provided for fidelity experiments; tests demonstrate the divergence.
+
+Footprint protocol: instead of hand-writing the pairwise ``conflicts``
+predicate, a model may declare per-task id footprints via
+``task_footprint(recipes) -> (read_ids [W, nr], write_ids [W, nw])``
+(int32, -1 = unused slot). The default ``conflicts`` is then derived from
+footprint intersection (``footprint_conflicts``), and — more importantly —
+the wavefront engine routes footprint models through the tiled Pallas
+prefix-conflict kernel (kernels/conflict) instead of materializing the
+broadcast predicate: one dependence implementation shared by the
+scheduler, the DES adapter, and the kernel.
 """
 from __future__ import annotations
 
@@ -30,9 +42,34 @@ import abc
 from typing import Any
 
 import jax
+import jax.numpy as jnp
 
 Recipes = Any  # pytree of arrays with leading dim W
 State = Any  # pytree of arrays
+Footprint = Any  # (read_ids, write_ids) int32 arrays, -1 padded
+
+
+def footprint_conflicts(fp_a: Footprint, fp_b: Footprint, *,
+                        strict: bool = True) -> jax.Array:
+    """Pairwise conflict predicate derived from id footprints.
+
+    fp_a/fp_b are (read_ids, write_ids) with broadcastable leading dims and
+    trailing id dims; negative ids are unused slots. Later task a conflicts
+    with earlier task b iff W_b ∩ R_a (flow; the paper's record rule), plus
+    W_b ∩ W_a (output) and W_a ∩ R_b (anti) under the strict closure.
+    """
+    reads_a, writes_a = fp_a
+    reads_b, writes_b = fp_b
+
+    def any_match(x, y):
+        eq = x[..., :, None] == y[..., None, :]
+        used = (x[..., :, None] >= 0) & (y[..., None, :] >= 0)
+        return jnp.any(eq & used, axis=(-1, -2))
+
+    c = any_match(reads_a, writes_b)
+    if strict:
+        c = c | any_match(writes_a, writes_b) | any_match(writes_a, reads_b)
+    return c
 
 
 class MABSModel(abc.ABC):
@@ -53,12 +90,29 @@ class MABSModel(abc.ABC):
         scheduling cannot influence the realized randomness.
         """
 
-    @abc.abstractmethod
+    def task_footprint(self, recipes: Recipes) -> Footprint | None:
+        """Optional id footprints: (read_ids [W, nr], write_ids [W, nw]),
+        int32 with -1 marking unused slots. Returning footprints (instead
+        of None) gives the model the derived ``conflicts`` below and puts
+        window scheduling on the Pallas/jnp conflict-kernel path. The
+        leading dims follow the recipe leaves' (so broadcasting recipes
+        broadcasts footprints)."""
+        return None
+
     def conflicts(self, a: Recipes, b: Recipes, *, strict: bool = True) -> jax.Array:
         """Pairwise predicate: does later task ``a`` conflict with earlier
         task ``b``? Broadcasts: a has shape [...,1]-style leading dims vs b.
         Used by records.prefix_conflicts to build the W×W matrix.
+
+        Default: derived from ``task_footprint`` intersection. Models
+        without footprints must override.
         """
+        fa, fb = self.task_footprint(a), self.task_footprint(b)
+        if fa is None or fb is None:
+            raise NotImplementedError(
+                f"{type(self).__name__} must implement task_footprint() "
+                "or override conflicts()")
+        return footprint_conflicts(fa, fb, strict=strict)
 
     @abc.abstractmethod
     def execute_wave(self, state: State, recipes: Recipes, mask: jax.Array) -> State:

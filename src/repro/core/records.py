@@ -47,6 +47,27 @@ def prefix_conflicts(
     return conf & lower & valid[:, None] & valid[None, :]
 
 
+def window_conflicts(model, recipes, valid: jax.Array, *,
+                     strict: bool = True,
+                     backend: str | None = None) -> jax.Array:
+    """Model-agnostic conflict matrix for one window.
+
+    Footprint models (task_footprint != None) route through the conflict
+    kernel — tiled Pallas on TPU, a fused jnp elementwise pass elsewhere
+    (kernels/conflict/ops.py). Predicate-only models fall back to the
+    broadcast ``prefix_conflicts`` path. Both produce the identical
+    strictly-lower-triangular [W, W] bool matrix.
+    """
+    fp = model.task_footprint(recipes)
+    if fp is not None:
+        from repro.kernels.conflict.ops import conflict_matrix
+
+        read_ids, write_ids = fp
+        return conflict_matrix(read_ids, write_ids, valid, strict=strict,
+                               backend=backend)
+    return prefix_conflicts(model.conflicts, recipes, valid, strict=strict)
+
+
 @partial(jax.jit, static_argnames=())
 def wave_levels(conflicts: jax.Array, valid: jax.Array) -> jax.Array:
     """DAG-level (wavefront) assignment.

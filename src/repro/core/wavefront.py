@@ -14,14 +14,19 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core.records import prefix_conflicts, wave_levels
+from repro.core.records import wave_levels, window_conflicts
 
 
 def execute_window(model, state, recipes, valid, *, strict: bool = True,
                    levels: jax.Array | None = None):
-    """Execute one window of tasks by waves. Returns (state, n_waves)."""
+    """Execute one window of tasks by waves. Returns (state, n_waves).
+
+    Scheduling (the conflict matrix) routes through the model's footprint
+    protocol when available — Pallas kernel on TPU, fused jnp fallback on
+    CPU — and through the legacy broadcast predicate otherwise.
+    """
     if levels is None:
-        conf = prefix_conflicts(model.conflicts, recipes, valid, strict=strict)
+        conf = window_conflicts(model, recipes, valid, strict=strict)
         levels = wave_levels(conf, valid)
     n_waves = jnp.max(levels) + 1  # dynamic
 
@@ -42,7 +47,7 @@ def execute_window(model, state, recipes, valid, *, strict: bool = True,
 def window_schedule_stats(model, recipes, valid, *, strict: bool = True):
     """Host-side scheduling statistics for a window (used by benchmarks):
     wave count, wave sizes, parallelism profile."""
-    conf = prefix_conflicts(model.conflicts, recipes, valid, strict=strict)
+    conf = window_conflicts(model, recipes, valid, strict=strict)
     levels = wave_levels(conf, valid)
     import numpy as np
 

@@ -11,11 +11,26 @@ compare over a [W, W] tile grid — VPU work with no MXU involvement, tiled
     cols: read_ids[bj·B : , :nr], write_ids[bj·B : , :nw]   (task j side)
     out:  conflict int32 block [B, B]
 
+Hazard semantics (shared repo-wide; see core/model.py):
+
+  strict=False — the paper's record rule: the record accumulates the write
+      sets of skipped tasks and tests them against the task at hand's READ
+      set, i.e. flow (RAW) hazards:      W_j ∩ R_i ≠ ∅.
+      (For models whose write ids also appear among their read ids — e.g.
+      Axelrod, where the target's traits are read to compute the overlap —
+      this equals the paper's flow+output statement exactly.)
+  strict=True  — full dependence closure: adds output (WAW) W_j ∩ W_i and
+      anti (WAR) W_i ∩ R_j hazards; the only rule that is bit-exact vs
+      sequential execution.
+
 The strictly-lower-triangular + validity masking happens in-kernel using
 global indices reconstructed from the grid position, so no extra pass over
 the matrix is needed. Blocks entirely above the diagonal are still visited
 (grid is dense) but write zeros; a production refinement could prune them
 with a custom grid -> documented in EXPERIMENTS.md §Perf.
+
+Windows that are not a multiple of the tile size are padded up with -1 ids
+and invalid slots (masked in-kernel via w_total), then sliced back.
 """
 from __future__ import annotations
 
@@ -39,19 +54,21 @@ def _kernel(nr: int, nw: int, strict: bool, w_total: int,
 
     conf = jnp.zeros((b, b), dtype=jnp.bool_)
 
-    # flow + output: write_j ∈ (reads_i ∪ writes_i)
+    # flow (RAW): write_j ∈ reads_i
     for a in range(nw):
         wj = writes_j[:, a][None, :]          # [1, B] earlier-task writes
         uj = wj >= 0
         for c in range(nr):
             ri = reads_i[:, c][:, None]       # [B, 1]
             conf |= (ri == wj) & uj & (ri >= 0)
-        for c in range(nw):
-            wi = writes_i[:, c][:, None]
-            conf |= (wi == wj) & uj & (wi >= 0)
+        if strict:
+            # output (WAW): write_j ∈ writes_i
+            for c in range(nw):
+                wi = writes_i[:, c][:, None]
+                conf |= (wi == wj) & uj & (wi >= 0)
 
     if strict:
-        # anti: write_i ∈ reads_j
+        # anti (WAR): write_i ∈ reads_j
         for a in range(nw):
             wi = writes_i[:, a][:, None]      # [B, 1]
             ui = wi >= 0
@@ -67,14 +84,28 @@ def _kernel(nr: int, nw: int, strict: bool, w_total: int,
 @functools.partial(
     jax.jit, static_argnames=("strict", "interpret", "block"))
 def conflict_matrix_pallas(read_ids, write_ids, valid, *, strict: bool = True,
-                           interpret: bool = True, block: int = BLOCK):
+                           interpret: bool | None = None, block: int = BLOCK):
     """read_ids [W, nr] int32, write_ids [W, nw] int32 (−1 = unused slot),
-    valid [W] bool. Returns [W, W] int32 prefix-conflict matrix."""
+    valid [W] bool. Returns [W, W] int32 prefix-conflict matrix.
+
+    interpret=None auto-detects the backend: compiled on TPU, Pallas
+    interpreter elsewhere. Any window size is accepted; non-multiples of
+    the tile size are padded to the next tile boundary internally.
+    """
+    if interpret is None:
+        from repro.kernels import interpret_default
+
+        interpret = interpret_default()
     w, nr = read_ids.shape
     nw = write_ids.shape[1]
     b = min(block, w)
-    assert w % b == 0, f"window {w} must be a multiple of block {b}"
-    grid = (w // b, w // b)
+    w_pad = -(-w // b) * b  # next multiple of the tile size
+    if w_pad != w:
+        pad = ((0, w_pad - w), (0, 0))
+        read_ids = jnp.pad(read_ids, pad, constant_values=-1)
+        write_ids = jnp.pad(write_ids, pad, constant_values=-1)
+        valid = jnp.pad(valid, (0, w_pad - w), constant_values=False)
+    grid = (w_pad // b, w_pad // b)
     valid_i32 = valid.astype(jnp.int32)[:, None]  # [W, 1] for clean tiling
 
     row_spec = pl.BlockSpec((b, nr), lambda i, j: (i, 0))
@@ -84,12 +115,13 @@ def conflict_matrix_pallas(read_ids, write_ids, valid, *, strict: bool = True,
     vrow_spec = pl.BlockSpec((b, 1), lambda i, j: (i, 0))
     vcol_spec = pl.BlockSpec((b, 1), lambda i, j: (j, 0))
 
-    return pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(_kernel, nr, nw, strict, w),
         grid=grid,
         in_specs=[row_spec, roww_spec, col_spec, colw_spec,
                   vrow_spec, vcol_spec],
         out_specs=pl.BlockSpec((b, b), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((w, w), jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((w_pad, w_pad), jnp.int32),
         interpret=interpret,
     )(read_ids, write_ids, read_ids, write_ids, valid_i32, valid_i32)
+    return out[:w, :w]

@@ -1,25 +1,59 @@
-"""Public wrapper for the prefix-conflict kernel."""
+"""Public wrapper for the prefix-conflict computation.
+
+Routes between the Pallas kernel (compiled on TPU; interpreter elsewhere)
+and a vectorized pure-jnp implementation. On CPU the jnp path is the
+default: Pallas interpret mode re-traces the tile loop in Python and is
+orders of magnitude slower than one fused XLA elementwise kernel, while on
+TPU the tiled Pallas kernel keeps each [B, B] block in VMEM.
+"""
 from __future__ import annotations
 
+import functools
+
+import jax
 import jax.numpy as jnp
 
-from repro.kernels import interpret_default
+from repro.core.model import footprint_conflicts
+from repro.kernels import ON_TPU
 from repro.kernels.conflict.conflict import conflict_matrix_pallas
 
 
+@functools.partial(jax.jit, static_argnames=("strict",))
+def conflict_matrix_jnp(read_ids, write_ids, valid, *, strict: bool = True):
+    """Vectorized fallback: the shared hazard algebra (footprint_conflicts)
+    broadcast to all pairs, plus the prefix/validity mask."""
+    w = read_ids.shape[0]
+    conf = footprint_conflicts(
+        (read_ids[:, None], write_ids[:, None]),
+        (read_ids[None, :], write_ids[None, :]),
+        strict=strict,
+    )
+    lower = jnp.tril(jnp.ones((w, w), dtype=bool), k=-1)
+    return conf & lower & valid[:, None] & valid[None, :]
+
+
 def conflict_matrix(read_ids, write_ids, valid, *, strict: bool = True,
+                    backend: str | None = None,
                     interpret: bool | None = None):
     """Prefix-conflict matrix [W, W] (bool) from id footprints.
 
     read_ids [W, nr] int32, write_ids [W, nw] int32; negative ids are unused
     slots; valid [W] bool masks padded window entries.
+
+    backend: None  — auto: Pallas (compiled) on TPU, jnp elsewhere;
+             "pallas" — force the kernel (interpret per ``interpret`` arg,
+                        itself auto-detected when None);
+             "jnp"    — force the vectorized fallback.
     """
-    interp = interpret_default() if interpret is None else interpret
-    out = conflict_matrix_pallas(
-        jnp.asarray(read_ids, jnp.int32),
-        jnp.asarray(write_ids, jnp.int32),
-        jnp.asarray(valid),
-        strict=strict,
-        interpret=interp,
-    )
-    return out.astype(bool)
+    read_ids = jnp.asarray(read_ids, jnp.int32)
+    write_ids = jnp.asarray(write_ids, jnp.int32)
+    valid = jnp.asarray(valid, bool)
+    if backend is None:
+        backend = "pallas" if ON_TPU else "jnp"
+    if backend == "jnp":
+        return conflict_matrix_jnp(read_ids, write_ids, valid, strict=strict)
+    if backend == "pallas":
+        out = conflict_matrix_pallas(read_ids, write_ids, valid,
+                                     strict=strict, interpret=interpret)
+        return out.astype(bool)
+    raise ValueError(f"unknown conflict backend {backend!r}")

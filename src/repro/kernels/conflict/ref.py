@@ -4,11 +4,12 @@ Footprint model: each task i declares read-ids R_i (shape [W, n_read]) and
 write-ids W_i (shape [W, n_write]); an id < 0 is "unused slot".
 Later task i conflicts with earlier task j (j < i) iff
 
-    (W_j ∩ R_i) ∪ (W_j ∩ W_i) ≠ ∅            (flow + output hazards)
-    ∪ (W_i ∩ R_j) ≠ ∅            when strict  (anti hazard)
+    W_j ∩ R_i ≠ ∅                      (flow hazard — the paper's record)
+    ∪ (W_j ∩ W_i) ∪ (W_i ∩ R_j) ≠ ∅    when strict (output + anti closure)
 
 which instantiates the paper's Axelrod record rule with R=[src, tgt],
-W=[tgt] (and the strict closure of DESIGN.md §10).
+W=[tgt] (there W ⊆ R, so the flow test already covers the output hazard)
+and the strict closure of DESIGN.md §10.
 """
 from __future__ import annotations
 
@@ -25,11 +26,10 @@ def _any_match(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
 def conflict_matrix_ref(read_ids, write_ids, valid, *, strict: bool = True):
     """[W, W] bool, strictly lower-triangular prefix-conflict matrix."""
     w = read_ids.shape[0]
-    raw = _any_match(read_ids, write_ids)       # W_j ∩ R_i  (i rows, j cols)
-    waw = _any_match(write_ids, write_ids)      # W_j ∩ W_i
-    conf = raw | waw
+    conf = _any_match(read_ids, write_ids)      # W_j ∩ R_i  (i rows, j cols)
     if strict:
+        waw = _any_match(write_ids, write_ids)  # W_j ∩ W_i
         war = _any_match(write_ids, read_ids)   # W_i ∩ R_j
-        conf = conf | war
+        conf = conf | waw | war
     lower = jnp.tril(jnp.ones((w, w), dtype=bool), k=-1)
     return conf & lower & valid[:, None] & valid[None, :]

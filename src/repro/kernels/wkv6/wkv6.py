@@ -36,6 +36,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.utils.compat import tpu_compiler_params
+
 DEFAULT_CHUNK = 128
 SUB = 32  # diagonal sub-block length
 
@@ -147,7 +149,7 @@ def wkv6_pallas(r, k, v, w, u, *, n_heads: int, interpret: bool = True,
             jax.ShapeDtypeStruct((bh, d, d), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((d, d), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(r, k, v, w, u)

@@ -1,4 +1,15 @@
-from repro.mabs.axelrod import AxelrodModel
-from repro.mabs.sir import SIRModel
+from repro.mabs.axelrod import AxelrodConfig, AxelrodModel
+from repro.mabs.sir import SIRConfig, SIRModel
+from repro.mabs.sis import SISConfig, SISModel
+from repro.mabs.voter import VoterConfig, VoterModel
 
-__all__ = ["AxelrodModel", "SIRModel"]
+__all__ = [
+    "AxelrodModel",
+    "AxelrodConfig",
+    "SIRModel",
+    "SIRConfig",
+    "SISModel",
+    "SISConfig",
+    "VoterModel",
+    "VoterConfig",
+]

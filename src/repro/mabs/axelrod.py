@@ -1,11 +1,15 @@
 """Axelrod-type cultural dynamics (paper §4.1, spec of Băbeanu et al. 2018).
 
-N agents on a complete graph; each holds F traits, each trait in {0..q-1}.
+N agents, each holding F traits with values in {0..q-1}, on a contact
+network: the seed's complete-graph mixing by default, or any
+``repro.topology.Topology`` (partner sampling is then network-restricted:
+the target is a uniform neighbor of the source).
 One *task* = one pairwise interaction (chain granularity, paper §3.4):
 
-  creation  — draw (source, target) uniformly at random among distinct
-              agents; bind the task's PRNG key (task depth: ids + randomness
-              are fixed at creation; the trait work happens at execution).
+  creation  — draw source uniformly, target uniformly among the source's
+              partners (all other agents, or its topology neighbors); bind
+              the task's PRNG key (task depth: ids + randomness are fixed
+              at creation; the trait work happens at execution).
   execution — overlap o = (1/F) Σ_f [s_f == t_f]; with probability o,
               if 0 < o < 1 and o >= 1 - ω (bounded confidence), the target
               copies one uniformly-chosen differing feature from the source.
@@ -22,7 +26,6 @@ Dependence rules (record, paper §3.5):
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -43,8 +46,19 @@ class AxelrodConfig:
 class AxelrodModel(MABSModel):
     name = "axelrod"
 
-    def __init__(self, config: AxelrodConfig | None = None):
+    def __init__(self, config: AxelrodConfig | None = None, *,
+                 topology=None):
+        """topology: optional repro.topology.Topology restricting partner
+        sampling to network neighbors (None = complete-graph mixing, the
+        seed behavior). Every node needs degree >= 1."""
         self.cfg = config or AxelrodConfig()
+        self.topology = topology
+        if topology is not None:
+            assert topology.n_nodes == self.cfg.n_agents, (
+                "topology size must match n_agents")
+            assert int(topology.degrees.min()) >= 1, (
+                "partner sampling needs every node to have a neighbor "
+                "(isolated nodes would sample the -1 padding slot)")
 
     # ------------------------------------------------------------- state
     def init_state(self, rng: jax.Array):
@@ -58,13 +72,19 @@ class AxelrodModel(MABSModel):
         cfg = self.cfg
         idx = start_index + jnp.arange(count)
 
+        topo = self.topology
+
         def one(i):
             k = jax.random.fold_in(base_key, i)
             ks, kt, kx = jax.random.split(k, 3)
             src = jax.random.randint(ks, (), 0, cfg.n_agents)
-            # distinct target: draw from n-1 and shift past src
-            tgt = jax.random.randint(kt, (), 0, cfg.n_agents - 1)
-            tgt = jnp.where(tgt >= src, tgt + 1, tgt)
+            if topo is None:
+                # distinct target: draw from n-1 and shift past src
+                tgt = jax.random.randint(kt, (), 0, cfg.n_agents - 1)
+                tgt = jnp.where(tgt >= src, tgt + 1, tgt)
+            else:
+                # network-restricted: uniform neighbor of the source
+                tgt = topo.sample_neighbor(kt, src)
             # kx is the execution key — randomness is *bound at creation*
             # (task-depth split), so scheduling cannot alter the trajectory.
             return src.astype(jnp.int32), tgt.astype(jnp.int32), kx
@@ -74,8 +94,20 @@ class AxelrodModel(MABSModel):
                 "key": key}
 
     # -------------------------------------------------------- dependence
+    def task_footprint(self, recipes):
+        """R = {src, tgt} (both trait rows are read), W = {tgt}. Property
+        tests assert the derived rule is identical to the hand-written
+        ``conflicts`` below for both strictness modes."""
+        reads = jnp.stack([recipes["src"], recipes["tgt"]], axis=-1)
+        writes = recipes["tgt"][..., None]
+        return reads, writes
+
     def conflicts(self, a, b, *, strict: bool = True):
-        """later a vs earlier b (broadcasting pytrees of id arrays)."""
+        """later a vs earlier b (broadcasting pytrees of id arrays).
+
+        Hand-written reference for the footprint-derived default (kept as
+        documentation of the paper's record rule and as the oracle for the
+        footprint-identity property tests)."""
         c = (a["src"] == b["tgt"]) | (a["tgt"] == b["tgt"])  # paper record rule
         if strict:
             c = c | (a["tgt"] == b["src"])  # anti-dependence closure
@@ -124,15 +156,22 @@ class AxelrodModel(MABSModel):
         generated with NumPy identically-distributed to create_tasks."""
         cfg = self.cfg
         rs = np.random.RandomState(seed)
+        topo_nbrs = topo_deg = None
+        if self.topology is not None:
+            topo_nbrs = np.asarray(self.topology.neighbors)
+            topo_deg = np.asarray(self.topology.degrees)
 
         cache: dict[int, tuple[int, int]] = {}
 
         def recipes_fn(i: int):
             if i not in cache:
                 src = int(rs.randint(cfg.n_agents))
-                tgt = int(rs.randint(cfg.n_agents - 1))
-                if tgt >= src:
-                    tgt += 1
+                if topo_nbrs is None:
+                    tgt = int(rs.randint(cfg.n_agents - 1))
+                    if tgt >= src:
+                        tgt += 1
+                else:
+                    tgt = int(topo_nbrs[src, rs.randint(topo_deg[src])])
                 cache[i] = (src, tgt)
             return cache[i]
 

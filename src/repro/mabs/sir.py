@@ -1,8 +1,9 @@
-"""SIRS epidemic on a fixed ring graph of constant degree k (paper §4.2).
+"""SIRS epidemic on a contact network (paper §4.2, generalized).
 
-N agents at the nodes of a ring where agent v is connected to v±1..±k/2.
+N agents on an arbitrary ``repro.topology.Topology`` (default: the paper's
+ring of constant degree k, agent v connected to v±1..±k/2).
 States: S=0, I=1, R=2. Per global step, each agent may advance one state:
-  S->I with prob p_SI * (infected fraction of its k neighbours)
+  S->I with prob p_SI * (infected fraction of its neighbours)
   I->R with prob p_IR
   R->S with prob p_RS
 using the *previous* step's states (synchronous update), realized with a
@@ -15,17 +16,28 @@ contiguous subsets of size s (chain granularity). Each global step emits
   type B (commit):  states[subset]     := new_states[subset]
 Chain order: step r = [A_0..A_{M-1}, B_0..B_{M-1}].
 
-Dependence rules — with blk(i) the subset id and adjacency on the aggregate
-subset graph (circular block distance <= ceil((k/2)/s), including self):
+Dependence — with blk(i) the subset id and adjacency on the *aggregate
+subset graph* (Topology.block_graph: blocks joined by any contact edge,
+every block adjacent to itself; on the ring this reduces to circular block
+distance <= ceil((k/2)/s)):
 
   paper rule (strict=False):
     B_i depends on earlier A_j  iff blk_i == blk_j
     A_i depends on earlier B_j  iff adjacent(blk_i, blk_j)
-  strict rule (strict=True) adds the anti-dependence the paper omits:
-    B_i depends on earlier A_j  iff adjacent(blk_i, blk_j)
-    (B_i writes states[blk_i] that a pending A_j still needs to read),
-    plus the A/A output hazard on the same subset (defensive; already
-    implied transitively by the round structure).
+  strict rule (strict=True) adds the hazards the paper omits:
+    B_i depends on earlier A_j  iff adjacent(blk_i, blk_j)   (anti: B_i
+      overwrites states[blk_i] that a pending A_j still reads),
+    A_i / A_j and B_i / B_j on the same subset (output hazards on
+      new_states[blk] resp. states[blk]; both transitively implied by the
+      round structure, kept for exact closure).
+
+Footprint form (task_footprint) — block-granular ids over two disjoint
+id spaces, states-block b -> b and new-states-block b -> M + b:
+  A_i:  R = {blocks adjacent to i} (states),  W = {M + i}
+  B_i:  R = {M + i},                          W = {i}
+whose derived RAW / RAW+WAW+WAR rules are *identical* to the hand-written
+predicates above (property-tested), and which puts SIRS scheduling on the
+conflict-kernel path.
 
 The recipe holds (subset id, type flag, step) — exactly the paper's "agent
 subset identifier along with a binary flag indicating the task's type".
@@ -40,6 +52,7 @@ import numpy as np
 
 from repro.core.model import MABSModel
 from repro.core.workersim import DESModel
+from repro.topology import Topology, ring
 
 S, I, R = 0, 1, 2
 
@@ -47,7 +60,7 @@ S, I, R = 0, 1, 2
 @dataclass
 class SIRConfig:
     n_agents: int = 4_000
-    k: int = 14                 # ring degree (k/2 on each side)
+    k: int = 14                 # default ring degree (k/2 on each side)
     subset_size: int = 50       # s — chain granularity / task-size proxy
     p_si: float = 0.8
     p_ir: float = 0.1
@@ -62,7 +75,8 @@ class SIRConfig:
 
     @property
     def block_reach(self) -> int:
-        """Aggregate-graph adjacency radius in blocks (incl. self = 0)."""
+        """Ring aggregate-graph adjacency radius in blocks (incl. self=0);
+        only meaningful for the default ring topology."""
         return -(-(self.k // 2) // self.subset_size)  # ceil division
 
     def tasks_per_step(self) -> int:
@@ -72,8 +86,19 @@ class SIRConfig:
 class SIRModel(MABSModel):
     name = "sir"
 
-    def __init__(self, config: SIRConfig | None = None):
-        self.cfg = config or SIRConfig()
+    def __init__(self, config: SIRConfig | None = None, *,
+                 topology: Topology | None = None):
+        """topology: contact network (None = ring of degree cfg.k, the
+        paper's setup). Block adjacency is derived from the topology."""
+        self.cfg = cfg = config or SIRConfig()
+        self.topology = topology if topology is not None else ring(
+            cfg.n_agents, cfg.k)
+        assert self.topology.n_nodes == cfg.n_agents
+        # Aggregate subset graph: [M]-node Topology with self loops (every
+        # block adjacent to itself, block_graph guarantees it); its padded
+        # neighbor rows double as the A-tasks' read-id footprints.
+        self.block_topo = self.topology.block_graph(cfg.subset_size)
+        self.block_adj = self.block_topo.adjacency()
 
     # ------------------------------------------------------------- state
     def init_state(self, rng: jax.Array):
@@ -102,13 +127,23 @@ class SIRModel(MABSModel):
 
     # -------------------------------------------------------- dependence
     def _adjacent(self, b1, b2):
+        return self.block_adj[b1, b2]
+
+    def task_footprint(self, recipes):
+        """Block-granular id footprints (see module docstring):
+        states-block b -> id b, new-states-block b -> id M + b."""
         m = self.cfg.n_subsets
-        d = jnp.abs(b1 - b2)
-        circ = jnp.minimum(d, m - d)
-        return circ <= self.cfg.block_reach
+        subset, ttype = recipes["subset"], recipes["type"]
+        is_commit = (ttype == 1)[..., None]
+        nbr_blocks = self.block_topo.neighbors[subset]    # [..., Db] states
+        buf_row = jnp.full_like(nbr_blocks, -1).at[..., 0].set(m + subset)
+        reads = jnp.where(is_commit, buf_row, nbr_blocks)
+        writes = jnp.where(ttype == 1, subset, m + subset)[..., None]
+        return reads.astype(jnp.int32), writes.astype(jnp.int32)
 
     def conflicts(self, a, b, *, strict: bool = True):
-        """later a vs earlier b."""
+        """later a vs earlier b — hand-written reference for the
+        footprint-derived default (property-tested identical)."""
         same = a["subset"] == b["subset"]
         adj = self._adjacent(a["subset"], b["subset"])
         a_is_b = a["type"] == 1
@@ -121,11 +156,30 @@ class SIRModel(MABSModel):
             # anti-dependence: a commit may not overtake a pending compute
             # of an adjacent subset (that compute still reads old states).
             c = c | (a_is_b & b_is_a & adj)
-            # defensive output hazard: two computes on the same subset.
+            # output hazards: two computes on the same subset (new_states)
+            # and two commits on the same subset (states); both transitively
+            # implied by the round structure, kept for exact closure.
             c = c | ((~a_is_b) & b_is_a & same)
+            c = c | (a_is_b & (~b_is_a) & same)
         return c
 
     # --------------------------------------------------------- execution
+    def _transition(self, states, agents, keys):
+        """Synchronous SIRS transition for agent rows [..., s] given the
+        per-row task keys; reads only ``states``."""
+        cfg = self.cfg
+        s_sz = agents.shape[-1]
+        inf_frac = self.topology.neighbor_fraction(states == I, agents)
+        cur = states[agents]
+        u = jax.vmap(lambda k: jax.random.uniform(k, (s_sz,)))(keys)
+        return jnp.where(
+            (cur == S) & (u < cfg.p_si * inf_frac), I,
+            jnp.where(
+                (cur == I) & (u < cfg.p_ir), R,
+                jnp.where((cur == R) & (u < cfg.p_rs), S, cur),
+            ),
+        ).astype(jnp.int8)
+
     def execute_wave(self, state, recipes, mask):
         cfg = self.cfg
         s_sz = cfg.subset_size
@@ -136,24 +190,7 @@ class SIRModel(MABSModel):
         agents = subset[:, None] * s_sz + jnp.arange(s_sz)[None, :]  # [W,s]
 
         # ---- type A: compute new states from current states ----
-        half = cfg.k // 2
-        offs = jnp.concatenate(
-            [jnp.arange(1, half + 1), -jnp.arange(1, half + 1)])  # [k]
-        nbrs = (agents[:, :, None] + offs[None, None, :]) % cfg.n_agents
-        inf_frac = jnp.mean(
-            (states[nbrs] == I).astype(jnp.float32), axis=-1)      # [W,s]
-
-        cur = states[agents]                                       # [W,s]
-        u = jax.vmap(
-            lambda k: jax.random.uniform(k, (s_sz,)))(recipes["key"])
-
-        nxt = jnp.where(
-            (cur == S) & (u < cfg.p_si * inf_frac), I,
-            jnp.where(
-                (cur == I) & (u < cfg.p_ir), R,
-                jnp.where((cur == R) & (u < cfg.p_rs), S, cur),
-            ),
-        ).astype(jnp.int8)
+        nxt = self._transition(states, agents, recipes["key"])     # [W,s]
 
         do_a = mask & (ttype == 0)
         rows_a = jnp.where(do_a[:, None], agents, cfg.n_agents)    # OOB drop
@@ -174,7 +211,7 @@ class SIRModel(MABSModel):
                   strict: bool = True) -> DESModel:
         cfg = self.cfg
         m = cfg.n_subsets
-        reach = cfg.block_reach
+        block_adj = np.asarray(self.block_adj)
 
         def recipes_fn(i: int):
             step, within = divmod(i, 2 * m)
@@ -191,17 +228,15 @@ class SIRModel(MABSModel):
             return rec
 
         def adjacent(b, seen: set) -> bool:
-            for d in range(-reach, reach + 1):
-                if (b + d) % m in seen:
-                    return True
-            return False
+            return any(block_adj[b, b2] for b2 in seen)
 
         def depends(rec, recipe):
             computes, commits = rec
             subset, ttype = recipe
             if ttype == 1:  # commit
+                d = subset in commits if strict else False
                 if strict:
-                    return adjacent(subset, computes)
+                    return d or adjacent(subset, computes)
                 return subset in computes
             # compute
             d = adjacent(subset, commits)
@@ -223,10 +258,17 @@ class SIRModel(MABSModel):
         )
 
     # -------------------------------------------------- reference stepper
-    def reference_step(self, state, step_key: jax.Array):
-        """Whole-system synchronous step (no protocol) — used to sanity-check
-        model dynamics; equals running 2M tasks when the per-agent keys
-        match, which they do because execute_wave keys agents by task key."""
-        raise NotImplementedError(
-            "use run_oracle for trajectory checks; reference_step exists "
-            "only as documentation of the synchronous semantics")
+    def reference_step(self, state, base_key: jax.Array, step: int):
+        """Whole-system synchronous step (no protocol): the textbook SIRS
+        update over all N agents at once. Uses the same per-subset task
+        keys the protocol's A tasks of global step ``step`` would draw, so
+        it is bit-exact vs running that step's 2M tasks through any engine
+        (tested in tests/test_core_protocol.py)."""
+        cfg = self.cfg
+        m = cfg.n_subsets
+        idx = step * 2 * m + jnp.arange(m)      # the step's A-task indices
+        keys = jax.vmap(lambda i: jax.random.fold_in(base_key, i))(idx)
+        agents = jnp.arange(cfg.n_agents, dtype=jnp.int32).reshape(
+            m, cfg.subset_size)
+        nxt = self._transition(state["states"], agents, keys).reshape(-1)
+        return {"states": nxt, "new_states": nxt}

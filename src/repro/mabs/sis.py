@@ -1,0 +1,89 @@
+"""SIS (susceptible-infected-susceptible) epidemic on a contact network.
+
+N agents with states S=0 / I=1 on an arbitrary topology. One *task* = one
+asynchronous per-agent update (finest chain granularity — contrast SIRS'
+block-synchronous mapping):
+
+  creation  — draw agent v uniformly; bind the execution key.
+  execution — S -> I with prob beta * (infected fraction of v's neighbors),
+              I -> S with prob gamma; reads v's and its neighbors' states.
+
+The dependence footprint is where the topology earns its keep: the task
+reads {v} ∪ neighbors(v) — the padded neighbor row drops straight into the
+read-id footprint, -1 slots and all — and writes {v}. ``conflicts`` is
+inherited from the footprint default; scheduling parallelism now tracks
+the graph structure (sparse graphs -> wide waves, hubs -> serialization),
+which benchmarks/topology_sweep.py measures.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.model import MABSModel
+from repro.topology import Topology
+
+S, I = 0, 1
+
+
+@dataclass
+class SISConfig:
+    beta: float = 0.6    # infection pressure per fully-infected neighborhood
+    gamma: float = 0.15  # recovery probability
+    i0: float = 0.1      # initial infected fraction
+
+
+class SISModel(MABSModel):
+    name = "sis"
+
+    def __init__(self, topology: Topology, config: SISConfig | None = None):
+        self.topology = topology
+        self.cfg = config or SISConfig()
+
+    # ------------------------------------------------------------- state
+    def init_state(self, rng: jax.Array):
+        u = jax.random.uniform(rng, (self.topology.n_nodes,))
+        return {"states": jnp.where(u < self.cfg.i0, I, S).astype(jnp.int8)}
+
+    # ---------------------------------------------------------- creation
+    def create_tasks(self, base_key: jax.Array, start_index, count: int):
+        topo = self.topology
+        idx = start_index + jnp.arange(count)
+
+        def one(i):
+            k = jax.random.fold_in(base_key, i)
+            kv, kx = jax.random.split(k)
+            v = jax.random.randint(kv, (), 0, topo.n_nodes)
+            return v.astype(jnp.int32), kx
+
+        v, key = jax.vmap(one)(idx)
+        return {"v": v, "index": idx.astype(jnp.int32), "key": key}
+
+    # -------------------------------------------------------- dependence
+    def task_footprint(self, recipes):
+        """R = {v} ∪ neighbors(v) (padded row reused verbatim), W = {v}."""
+        v = recipes["v"]
+        reads = jnp.concatenate(
+            [v[..., None], self.topology.neighbors[v]], axis=-1)
+        return reads.astype(jnp.int32), v[..., None]
+
+    # --------------------------------------------------------- execution
+    def execute_wave(self, state, recipes, mask):
+        cfg = self.cfg
+        topo = self.topology
+        states = state["states"]
+        v = recipes["v"]
+
+        inf_frac = topo.neighbor_fraction(states == I, v)        # [W]
+        cur = states[v]
+        u = jax.vmap(jax.random.uniform)(recipes["key"])         # [W]
+        nxt = jnp.where(
+            (cur == S) & (u < cfg.beta * inf_frac), I,
+            jnp.where((cur == I) & (u < cfg.gamma), S, cur),
+        ).astype(jnp.int8)
+
+        rows = jnp.where(mask, v, topo.n_nodes)  # OOB drop when inactive
+        states = states.at[rows].set(jnp.where(mask, nxt, 0), mode="drop")
+        return {"states": states}

@@ -1,0 +1,80 @@
+"""Voter model on an arbitrary contact network.
+
+N agents, each holding one of q opinions. One *task* = one asynchronous
+update (chain granularity):
+
+  creation  — draw agent v uniformly; draw u uniformly among v's topology
+              neighbors (task depth: both ids fixed at creation, so the
+              dependence footprint is pure id matching).
+  execution — v adopts u's opinion:  opinions[v] := opinions[u].
+
+This is the first model written *natively* against the footprint protocol:
+it declares ``task_footprint`` (R = {u}, W = {v}) and inherits the derived
+``conflicts`` from MABSModel — no hand-written dependence predicate, and
+window scheduling runs through the conflict kernel. Only the strict rule
+(adding the v_i == v_j output and v_i == u_j anti hazards to the paper's
+u_i == v_j record test) is bit-exact vs sequential execution.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.model import MABSModel
+from repro.topology import Topology
+
+
+@dataclass
+class VoterConfig:
+    n_opinions: int = 2
+
+
+class VoterModel(MABSModel):
+    name = "voter"
+
+    def __init__(self, topology: Topology,
+                 config: VoterConfig | None = None):
+        assert int(topology.degrees.min()) >= 1, (
+            "voter dynamics need every node to have a neighbor "
+            "(isolated nodes would sample the -1 padding slot)")
+        self.topology = topology
+        self.cfg = config or VoterConfig()
+
+    # ------------------------------------------------------------- state
+    def init_state(self, rng: jax.Array):
+        opinions = jax.random.randint(
+            rng, (self.topology.n_nodes,), 0, self.cfg.n_opinions,
+            dtype=jnp.int32)
+        return {"opinions": opinions}
+
+    # ---------------------------------------------------------- creation
+    def create_tasks(self, base_key: jax.Array, start_index, count: int):
+        topo = self.topology
+        idx = start_index + jnp.arange(count)
+
+        def one(i):
+            k = jax.random.fold_in(base_key, i)
+            kv, ku = jax.random.split(k)
+            v = jax.random.randint(kv, (), 0, topo.n_nodes)
+            u = topo.sample_neighbor(ku, v)
+            return v.astype(jnp.int32), u.astype(jnp.int32)
+
+        v, u = jax.vmap(one)(idx)
+        return {"v": v, "u": u, "index": idx.astype(jnp.int32)}
+
+    # -------------------------------------------------------- dependence
+    def task_footprint(self, recipes):
+        """R = {u} (the copied opinion), W = {v} (the updated agent)."""
+        return recipes["u"][..., None], recipes["v"][..., None]
+
+    # --------------------------------------------------------- execution
+    def execute_wave(self, state, recipes, mask):
+        opinions = state["opinions"]
+        n = self.topology.n_nodes
+        new_vals = opinions[recipes["u"]]
+        rows = jnp.where(mask, recipes["v"], n)  # OOB drop when inactive
+        opinions = opinions.at[rows].set(
+            jnp.where(mask, new_vals, 0), mode="drop")
+        return {"opinions": opinions}

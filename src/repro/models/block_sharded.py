@@ -27,6 +27,8 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
+
+from repro.utils.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.models.attention import attention_inner
@@ -90,7 +92,7 @@ def attn_mlp_block_sharded(lp, x, cfg, *, positions, window, mesh):
         return xs + mlp.astype(xs.dtype)
 
     kv_spec = P(None, "model") if kv_sharded else P(None, None)
-    return jax.shard_map(
+    return shard_map(
         fn, mesh=mesh,
         in_specs=(P(bspec, "model", None),   # x: T-sharded
                   P(None),                   # norm1 scale

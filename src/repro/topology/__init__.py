@@ -1,0 +1,42 @@
+"""Contact-topology subsystem: padded-CSR neighbor tables + generators.
+
+  graph.py       — Topology (neighbors [N, max_deg] int32, -1 padded),
+                   block aggregation, masked gathers
+  generators.py  — ring-k, 2D lattice (von Neumann / Moore),
+                   Watts-Strogatz, Erdos-Renyi, Barabasi-Albert, complete
+
+The -1 padding convention is shared with the conflict kernel's id
+footprints, so neighbor rows drop directly into task read sets.
+"""
+from repro.topology.generators import (
+    barabasi_albert,
+    complete,
+    connect_isolated,
+    erdos_renyi,
+    lattice2d,
+    ring,
+    watts_strogatz,
+)
+from repro.topology.graph import PAD, Topology, from_adjacency
+
+__all__ = [
+    "Topology",
+    "from_adjacency",
+    "PAD",
+    "ring",
+    "lattice2d",
+    "watts_strogatz",
+    "erdos_renyi",
+    "barabasi_albert",
+    "complete",
+    "connect_isolated",
+]
+
+GENERATORS = {
+    "ring": ring,
+    "lattice2d": lattice2d,
+    "watts_strogatz": watts_strogatz,
+    "erdos_renyi": erdos_renyi,
+    "barabasi_albert": barabasi_albert,
+    "complete": complete,
+}

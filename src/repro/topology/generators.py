@@ -1,0 +1,165 @@
+"""Pure-JAX contact-network generators, all returning padded-CSR Topology.
+
+Every generator is deterministic in its ``key`` and built from jnp ops, so
+it can run under jit when its shape parameters (n, max_degree, ...) are
+static. Random families (Watts-Strogatz, Erdos-Renyi, Barabasi-Albert) go
+through a dense [n, n] boolean adjacency — fine for the n <= O(10^4) regime
+these scenarios target; a sparse builder is a later scaling item.
+
+Conventions: undirected simple graphs (no self loops, no multi-edges);
+neighbor rows ascend by node id; padding id is -1 (graph.PAD).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.topology.graph import Topology, from_adjacency
+
+__all__ = [
+    "ring",
+    "lattice2d",
+    "watts_strogatz",
+    "erdos_renyi",
+    "barabasi_albert",
+    "complete",
+    "connect_isolated",
+]
+
+
+def connect_isolated(topo: Topology, key: jax.Array) -> Topology:
+    """Attach every isolated node to one uniformly-random other node.
+
+    Random families (Erdos-Renyi at low p, heavily-rewired Watts-Strogatz)
+    can leave degree-0 nodes, which sampling-based dynamics (voter,
+    network Axelrod) reject — this is the standard patch-up when those
+    dynamics need a cover of the whole population.
+    """
+    n = topo.n_nodes
+    adj = topo.adjacency()
+    iso = topo.degrees == 0
+    partner = jax.random.randint(key, (n,), 0, n - 1, dtype=jnp.int32)
+    partner = jnp.where(partner >= jnp.arange(n), partner + 1, partner)
+    add = jnp.zeros_like(adj).at[jnp.arange(n), partner].set(iso)
+    return from_adjacency(adj | add | add.T)
+
+
+def ring(n: int, k: int) -> Topology:
+    """Ring lattice: node v connects to v +/- 1..k/2 (mod n). k even."""
+    assert k % 2 == 0 and 0 < k < n, "need even k with 0 < k < n"
+    half = k // 2
+    v = jnp.arange(n, dtype=jnp.int32)[:, None]
+    offs = jnp.concatenate([jnp.arange(1, half + 1),
+                            -jnp.arange(1, half + 1)]).astype(jnp.int32)
+    nbrs = (v + offs[None, :]) % n
+    nbrs = jnp.sort(nbrs, axis=1)
+    deg = jnp.full((n,), k, dtype=jnp.int32)
+    return Topology(neighbors=nbrs.astype(jnp.int32), degrees=deg)
+
+
+def lattice2d(height: int, width: int, *, neighborhood: str = "von_neumann",
+              periodic: bool = True) -> Topology:
+    """2D grid, row-major node ids. von_neumann = 4-neighborhood,
+    moore = 8-neighborhood; periodic wraps at the edges (torus)."""
+    if neighborhood == "von_neumann":
+        offs = [(-1, 0), (1, 0), (0, -1), (0, 1)]
+    elif neighborhood == "moore":
+        offs = [(dr, dc) for dr in (-1, 0, 1) for dc in (-1, 0, 1)
+                if (dr, dc) != (0, 0)]
+    else:
+        raise ValueError(f"unknown neighborhood {neighborhood!r}")
+    rows = jnp.arange(height, dtype=jnp.int32)[:, None]
+    cols = jnp.arange(width, dtype=jnp.int32)[None, :]
+    nbr_list, mask_list = [], []
+    for dr, dc in offs:
+        rr, cc = rows + dr, cols + dc
+        if periodic:
+            valid = jnp.ones((height, width), dtype=bool)
+            rr, cc = rr % height, cc % width
+        else:
+            valid = (rr >= 0) & (rr < height) & (cc >= 0) & (cc < width)
+            rr, cc = rr % height, cc % width
+        nbr_list.append((rr * width + cc).reshape(-1))
+        mask_list.append(jnp.broadcast_to(valid, (height, width)).reshape(-1))
+    nbrs = jnp.stack(nbr_list, axis=1).astype(jnp.int32)   # [N, |offs|]
+    mask = jnp.stack(mask_list, axis=1)
+    # Non-periodic small grids / periodic 2-wide grids can produce duplicate
+    # neighbor ids (wraparound collisions); dedup through the adjacency.
+    n = height * width
+    adj = jnp.zeros((n, n), dtype=bool)
+    v = jnp.repeat(jnp.arange(n, dtype=jnp.int32)[:, None], len(offs), axis=1)
+    adj = adj.at[v.reshape(-1),
+                 jnp.where(mask, nbrs, 0).reshape(-1)].max(mask.reshape(-1))
+    return from_adjacency(adj | adj.T, max_degree=len(offs))
+
+
+def watts_strogatz(n: int, k: int, beta: float, key: jax.Array,
+                   *, max_degree: int | None = None) -> Topology:
+    """Small-world rewiring of a ring-k lattice (Watts & Strogatz 1998).
+
+    Each clockwise edge (v, v+j), j = 1..k/2, is rewired with probability
+    beta to (v, u) with u uniform != v. A rewire that lands on an existing
+    edge is dropped (standard simple-graph variant), so degrees may vary
+    around k. max_degree defaults to a host-computed tight bound.
+    """
+    assert k % 2 == 0 and 0 < k < n, "need even k with 0 < k < n"
+    half = k // 2
+    k_rew, k_tgt = jax.random.split(key)
+    v = jnp.arange(n, dtype=jnp.int32)[:, None]               # [n, 1]
+    j = jnp.arange(1, half + 1, dtype=jnp.int32)[None, :]     # [1, half]
+    rewire = jax.random.uniform(k_rew, (n, half)) < beta
+    u = jax.random.randint(k_tgt, (n, half), 0, n - 1, dtype=jnp.int32)
+    u = jnp.where(u >= v, u + 1, u)                           # uniform != v
+    tgt = jnp.where(rewire, u, (v + j) % n)                   # [n, half]
+
+    adj = jnp.zeros((n, n), dtype=bool)
+    src = jnp.broadcast_to(v, (n, half))
+    adj = adj.at[src.reshape(-1), tgt.reshape(-1)].set(True)
+    adj = adj | adj.T
+    return from_adjacency(adj, max_degree=max_degree)
+
+
+def erdos_renyi(n: int, p: float, key: jax.Array,
+                *, max_degree: int | None = None) -> Topology:
+    """G(n, p): each of the n(n-1)/2 undirected edges present w.p. p."""
+    u = jax.random.uniform(key, (n, n))
+    upper = jnp.triu(u < p, k=1)
+    adj = upper | upper.T
+    return from_adjacency(adj, max_degree=max_degree)
+
+
+def barabasi_albert(n: int, m: int, key: jax.Array,
+                    *, max_degree: int | None = None) -> Topology:
+    """Preferential attachment (Barabasi & Albert 1999): start from a
+    complete seed of m+1 nodes; each arriving node attaches to m distinct
+    existing nodes sampled proportionally to degree (Gumbel top-m over
+    log-degree — exact weighted sampling without replacement).
+    """
+    assert 1 <= m < n
+    seed_sz = m + 1
+    adj0 = jnp.zeros((n, n), dtype=bool)
+    seed_mask = (jnp.arange(n) < seed_sz)
+    adj0 = adj0.at[:seed_sz, :seed_sz].set(
+        ~jnp.eye(seed_sz, dtype=bool))
+    deg0 = jnp.where(seed_mask, m, 0).astype(jnp.float32)
+
+    def attach(carry, t):
+        adj, deg = carry
+        exists = jnp.arange(n) < t                       # nodes already in
+        logits = jnp.where(exists, jnp.log(jnp.maximum(deg, 1e-9)), -jnp.inf)
+        g = jax.random.gumbel(jax.random.fold_in(key, t), (n,))
+        _, targets = jax.lax.top_k(logits + g, m)        # m distinct nodes
+        adj = adj.at[t, targets].set(True)
+        adj = adj.at[targets, t].set(True)
+        deg = deg.at[targets].add(1.0)
+        deg = deg.at[t].add(float(m))
+        return (adj, deg), None
+
+    (adj, _), _ = jax.lax.scan(attach, (adj0, deg0),
+                               jnp.arange(seed_sz, n))
+    return from_adjacency(adj, max_degree=max_degree)
+
+
+def complete(n: int) -> Topology:
+    """Complete graph K_n (the seed Axelrod mixing assumption)."""
+    return from_adjacency(jnp.ones((n, n), dtype=bool), max_degree=n - 1)

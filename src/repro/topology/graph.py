@@ -1,0 +1,156 @@
+"""Padded-CSR contact topology — the substrate for localized dynamics.
+
+The paper's protocol only assumes updates are *localized*; the structure of
+the contact network is what determines how much parallelism the record check
+exposes (cf. Fachada et al. on spatial decomposition). ``Topology`` is the
+repo-wide representation of that network: a fixed-width neighbor table
+
+    neighbors : [n_nodes, max_degree] int32, row v lists v's neighbors,
+                padded with -1 past degrees[v]
+    degrees   : [n_nodes] int32
+
+which is the SPMD-friendly dual of a CSR adjacency — every gather is a
+rectangular ``neighbors[v]`` with a static trailing dim, so model code can
+vmap/jit over it freely. The -1 padding convention matches the conflict
+kernel's "unused id slot" convention, letting ``neighbors[v]`` be dropped
+directly into a task's read-id footprint.
+
+Registered as a pytree so a Topology can be closed over by jitted functions
+or passed through them as an argument.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+PAD = -1  # unused neighbor slot; also "unused id" in the conflict kernel
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class Topology:
+    """Undirected contact graph in padded neighbor-table form."""
+
+    neighbors: jax.Array  # [n_nodes, max_degree] int32, -1 padded
+    degrees: jax.Array    # [n_nodes] int32
+
+    def tree_flatten(self):
+        return (self.neighbors, self.degrees), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    # ---------------------------------------------------------- properties
+    @property
+    def n_nodes(self) -> int:
+        return self.neighbors.shape[0]
+
+    @property
+    def max_degree(self) -> int:
+        return self.neighbors.shape[1]
+
+    @property
+    def n_edges(self) -> jax.Array:
+        """Undirected edge count. A proper edge appears in two rows, a
+        self-loop (block graphs have them) in one."""
+        n = self.neighbors.shape[0]
+        loops = jnp.sum(jnp.any(
+            self.neighbors == jnp.arange(n, dtype=jnp.int32)[:, None],
+            axis=1))
+        return (jnp.sum(self.degrees) + loops) // 2
+
+    # ------------------------------------------------------------- queries
+    def neighbor_mask(self) -> jax.Array:
+        """[n_nodes, max_degree] bool — True where a slot holds a neighbor."""
+        return self.neighbors >= 0
+
+    def gather(self, values: jax.Array, rows: jax.Array,
+               fill=0) -> tuple[jax.Array, jax.Array]:
+        """values[neighbors[rows]] with padded slots replaced by ``fill``.
+
+        rows may have any leading shape; returns (gathered, mask) with shape
+        rows.shape + (max_degree,) (+ values' trailing dims).
+        """
+        nbrs = self.neighbors[rows]
+        mask = nbrs >= 0
+        safe = jnp.where(mask, nbrs, 0)
+        out = values[safe]
+        bshape = mask.shape + (1,) * (out.ndim - mask.ndim)
+        return jnp.where(mask.reshape(bshape), out, fill), mask
+
+    def neighbor_fraction(self, indicator: jax.Array,
+                          rows: jax.Array) -> jax.Array:
+        """Mean of a boolean per-node indicator over each row's neighbors
+        (0 where degree is 0) — e.g. the infected fraction in epidemics."""
+        vals, _ = self.gather(indicator.astype(jnp.float32), rows, fill=0.0)
+        deg = jnp.maximum(self.degrees[rows], 1).astype(jnp.float32)
+        return jnp.sum(vals, axis=-1) / deg
+
+    def sample_neighbor(self, key: jax.Array, v: jax.Array) -> jax.Array:
+        """Uniform neighbor of node v (scalar); v must have degree >= 1."""
+        j = jax.random.randint(key, (), 0, jnp.maximum(self.degrees[v], 1))
+        return self.neighbors[v, j]
+
+    # -------------------------------------------------------- derived graphs
+    def block_graph(self, block_size: int) -> "Topology":
+        """Aggregate topology over contiguous node blocks of ``block_size``.
+
+        Block b = nodes [b*s, (b+1)*s). Blocks b1, b2 are adjacent iff some
+        edge connects them; every block is adjacent to itself. This is the
+        paper's §4.2 "aggregate subset graph" generalized from the ring to
+        arbitrary contact networks; SIRS-style models use it for their
+        block-granular dependence footprints.
+        """
+        n, s = self.n_nodes, int(block_size)
+        assert n % s == 0, "block_size must divide n_nodes"
+        m = n // s
+        blk = jnp.arange(n, dtype=jnp.int32) // s                # [N]
+        nbr_blk = jnp.where(self.neighbors >= 0,
+                            self.neighbors // s, PAD)            # [N, D]
+        adj = jnp.zeros((m, m), dtype=bool)
+        rows = jnp.repeat(blk[:, None], self.max_degree, axis=1)
+        adj = adj.at[rows.reshape(-1),
+                     jnp.where(nbr_blk < 0, 0, nbr_blk).reshape(-1)].max(
+            (nbr_blk >= 0).reshape(-1))
+        adj = adj | adj.T | jnp.eye(m, dtype=bool)
+        return from_adjacency(adj, allow_self_loops=True)
+
+    def adjacency(self) -> jax.Array:
+        """Dense [n, n] bool adjacency (diagnostics / small graphs)."""
+        n = self.n_nodes
+        adj = jnp.zeros((n, n), dtype=bool)
+        rows = jnp.repeat(jnp.arange(n, dtype=jnp.int32)[:, None],
+                          self.max_degree, axis=1)
+        cols = jnp.where(self.neighbors < 0, 0, self.neighbors)
+        return adj.at[rows.reshape(-1), cols.reshape(-1)].max(
+            (self.neighbors >= 0).reshape(-1))
+
+
+def from_adjacency(adj: jax.Array, *, max_degree: int | None = None,
+                   allow_self_loops: bool = False) -> Topology:
+    """Build a Topology from a dense boolean adjacency matrix.
+
+    Pure-jnp and jittable when ``max_degree`` is given (a static bound on
+    row degree); when None, it is computed from the concrete matrix on the
+    host. A row with more than ``max_degree`` neighbors keeps only its
+    ``max_degree`` lowest-id ones (degrees are clamped to match, so the
+    table stays self-consistent) — pick a generous bound when jitting
+    random-graph generators. Rows are packed neighbor-first via a stable
+    argsort, preserving ascending neighbor-id order within each row.
+    """
+    adj = jnp.asarray(adj, dtype=bool)
+    n = adj.shape[0]
+    if not allow_self_loops:
+        adj = adj & ~jnp.eye(n, dtype=bool)
+    degrees = jnp.sum(adj, axis=1).astype(jnp.int32)
+    if max_degree is None:
+        max_degree = max(int(jnp.max(degrees)), 1)  # host-side (concrete)
+    degrees = jnp.minimum(degrees, max_degree)
+    # Stable sort puts True entries first while keeping column order.
+    order = jnp.argsort(~adj, axis=1, stable=True)[:, :max_degree]
+    slot = jnp.arange(max_degree, dtype=jnp.int32)[None, :]
+    nbrs = jnp.where(slot < degrees[:, None], order, PAD).astype(jnp.int32)
+    return Topology(neighbors=nbrs, degrees=degrees)

@@ -1,0 +1,37 @@
+"""Version compatibility shims for the jax API surface we use.
+
+The repo targets the Pallas/TPU API as documented in the accelerator
+guides; installed jax versions sometimes lag (or lead) those names.
+Centralizing the fallbacks here keeps kernel and model code on the
+canonical spelling.
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # newer jax: top-level re-export, check_vma kwarg
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover - older jax
+    import inspect
+
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    if "check_vma" in inspect.signature(_shard_map).parameters:
+        shard_map = _shard_map
+    else:
+
+        def shard_map(*args, **kwargs):
+            # old spelling of the replication check flag
+            if "check_vma" in kwargs:
+                kwargs["check_rep"] = kwargs.pop("check_vma")
+            return _shard_map(*args, **kwargs)
+
+
+def tpu_compiler_params(**kwargs):
+    """pltpu.CompilerParams (new name) / pltpu.TPUCompilerParams (old)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:  # pragma: no cover - depends on jax version
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)

@@ -111,3 +111,18 @@ def test_prefix_conflicts_masks_invalid():
     c = np.asarray(conf)
     assert not c[10:].any() and not c[:, 10:].any()
     assert not np.triu(c).any()
+
+
+def test_sir_reference_step_matches_protocol():
+    """The synchronous whole-system stepper equals one protocol step
+    (2M tasks) through the wavefront engine, per-agent keys and all."""
+    m = SIRModel(SIRConfig(n_agents=100, k=6, subset_size=10, i0=0.3))
+    st0 = m.init_state(jax.random.key(2))
+    seed = 5
+    st = st0
+    for step in range(3):
+        st = m.reference_step(st, jax.random.key(seed), step)
+    st_w, _ = run_wavefront(m, st0, m.cfg.tasks_per_step() * 3, seed=seed,
+                            config=ProtocolConfig(window=40, strict=True))
+    assert bool(jnp.all(st_w["states"] == st["states"]))
+    assert bool(jnp.all(st_w["new_states"] == st["new_states"]))

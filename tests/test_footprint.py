@@ -1,0 +1,123 @@
+"""Footprint protocol: derived conflicts == hand-written predicates, and
+all three conflict-matrix implementations (broadcast predicate, jnp
+fallback, Pallas kernel) agree on the same windows."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import footprint_conflicts, prefix_conflicts, window_conflicts
+from repro.kernels.conflict.ops import conflict_matrix, conflict_matrix_jnp
+from repro.kernels.conflict.ref import conflict_matrix_ref
+from repro.mabs.axelrod import AxelrodConfig, AxelrodModel
+from repro.mabs.sir import SIRConfig, SIRModel
+from repro.mabs.sis import SISModel
+from repro.mabs.voter import VoterModel
+from repro.topology import erdos_renyi, ring, watts_strogatz
+
+
+def _axelrod_models():
+    topo = watts_strogatz(40, 4, 0.25, jax.random.key(5))
+    return [
+        ("complete", AxelrodModel(AxelrodConfig(n_agents=40, n_features=3))),
+        ("ws", AxelrodModel(AxelrodConfig(n_agents=40, n_features=3),
+                            topology=topo)),
+    ]
+
+
+def _sir_models():
+    er = erdos_renyi(120, 0.04, jax.random.key(6))
+    cfg = SIRConfig(n_agents=120, k=6, subset_size=10, i0=0.3)
+    return [
+        ("ring", SIRModel(cfg)),
+        ("er", SIRModel(cfg, topology=er)),
+    ]
+
+
+@pytest.mark.parametrize("name,model",
+                         _axelrod_models() + _sir_models())
+@pytest.mark.parametrize("strict", [True, False])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_footprint_identical_to_handwritten(name, model, strict, seed):
+    """The footprint-derived rule must reproduce the hand-written
+    ``conflicts`` predicate EXACTLY — strict and paper rules — on both
+    seed scenarios, over full and padded windows."""
+    w = 64
+    recipes = model.create_tasks(jax.random.key(seed), seed * w, w)
+    rng = np.random.RandomState(seed)
+    valid = jnp.asarray(rng.rand(w) < 0.9)
+
+    hand = prefix_conflicts(model.conflicts, recipes, valid, strict=strict)
+
+    # 1) derived pairwise predicate == hand-written predicate
+    rows = jax.tree_util.tree_map(lambda x: x[:, None], recipes)
+    cols = jax.tree_util.tree_map(lambda x: x[None, :], recipes)
+    derived = footprint_conflicts(model.task_footprint(rows),
+                                  model.task_footprint(cols), strict=strict)
+    lower = jnp.tril(jnp.ones((w, w), bool), k=-1)
+    derived = derived & lower & valid[:, None] & valid[None, :]
+    assert bool(jnp.all(derived == hand))
+
+    # 2) the kernel-path matrix (what the engine actually schedules with)
+    reads, writes = model.task_footprint(recipes)
+    for backend in ("jnp", "pallas"):
+        got = conflict_matrix(reads, writes, valid, strict=strict,
+                              backend=backend)
+        assert bool(jnp.all(got == hand)), backend
+
+    # 3) and the engine's own router picks the footprint path
+    routed = window_conflicts(model, recipes, valid, strict=strict)
+    assert bool(jnp.all(routed == hand))
+
+
+@pytest.mark.parametrize("strict", [True, False])
+def test_new_models_inherit_footprint_conflicts(strict):
+    """Voter/SIS have no hand-written predicate: MABSModel.conflicts must
+    come from their footprints and agree with the reference oracle."""
+    topo = ring(50, 4)
+    for model in (VoterModel(topo), SISModel(topo)):
+        w = 48
+        recipes = model.create_tasks(jax.random.key(0), 0, w)
+        valid = jnp.ones(w, bool)
+        via_predicate = prefix_conflicts(model.conflicts, recipes, valid,
+                                         strict=strict)
+        reads, writes = model.task_footprint(recipes)
+        ref = conflict_matrix_ref(reads, writes, valid, strict=strict)
+        assert bool(jnp.all(via_predicate == ref))
+
+
+@pytest.mark.parametrize("w", [17, 100, 130, 300])
+@pytest.mark.parametrize("strict", [True, False])
+def test_pallas_pad_to_block(w, strict):
+    """Windows that are not a multiple of the 128 tile must pad internally
+    and match both the jnp fallback and the reference."""
+    rng = np.random.RandomState(w)
+    reads = rng.randint(-1, 30, size=(w, 3)).astype(np.int32)
+    writes = rng.randint(-1, 30, size=(w, 2)).astype(np.int32)
+    valid = jnp.asarray(rng.rand(w) < 0.9)
+    pal = conflict_matrix(reads, writes, valid, strict=strict,
+                          backend="pallas")
+    jnp_ = conflict_matrix_jnp(jnp.asarray(reads), jnp.asarray(writes),
+                               valid, strict=strict)
+    ref = conflict_matrix_ref(jnp.asarray(reads), jnp.asarray(writes),
+                              valid, strict=strict)
+    assert pal.shape == (w, w)
+    assert bool(jnp.all(pal == ref))
+    assert bool(jnp.all(jnp_ == ref))
+
+
+def test_paper_rule_is_flow_only():
+    """Non-strict = RAW: a pure write/write or write/read collision must
+    not conflict under the paper's record rule but must under strict."""
+    reads = jnp.asarray([[0], [1]], jnp.int32)   # task0 reads 0, task1 reads 1
+    writes = jnp.asarray([[7], [7]], jnp.int32)  # both write 7 (WAW only)
+    valid = jnp.ones(2, bool)
+    assert not bool(conflict_matrix_ref(reads, writes, valid,
+                                        strict=False)[1, 0])
+    assert bool(conflict_matrix_ref(reads, writes, valid, strict=True)[1, 0])
+    # WAR: task1 writes what task0 reads
+    reads = jnp.asarray([[3], [-1]], jnp.int32)
+    writes = jnp.asarray([[9], [3]], jnp.int32)
+    assert not bool(conflict_matrix_ref(reads, writes, valid,
+                                        strict=False)[1, 0])
+    assert bool(conflict_matrix_ref(reads, writes, valid, strict=True)[1, 0])

@@ -10,7 +10,8 @@ rng = np.random.RandomState(7)
 # ---------------------------------------------------------------- conflict
 @pytest.mark.parametrize("w", [128, 256, 512])
 @pytest.mark.parametrize("strict", [True, False])
-def test_conflict_sweep(w, strict):
+@pytest.mark.parametrize("backend", ["pallas", "jnp"])
+def test_conflict_sweep(w, strict, backend):
     from repro.kernels.conflict.ops import conflict_matrix
     from repro.kernels.conflict.ref import conflict_matrix_ref
 
@@ -18,7 +19,8 @@ def test_conflict_sweep(w, strict):
     writes = reads[:, 1:].copy()
     valid = np.ones(w, bool)
     valid[-3:] = False
-    out = conflict_matrix(reads, writes, valid, strict=strict)
+    out = conflict_matrix(reads, writes, valid, strict=strict,
+                          backend=backend)
     ref = conflict_matrix_ref(jnp.asarray(reads), jnp.asarray(writes),
                               jnp.asarray(valid), strict=strict)
     assert bool(jnp.all(out == ref))

@@ -1,0 +1,103 @@
+"""New scenarios (voter, SIS) + topology-ported seed scenarios: wavefront
+execution must equal the sequential oracle bit-exactly under the strict
+rule on every contact network (the acceptance bar for the subsystem)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ProtocolConfig, run_oracle, run_wavefront
+from repro.mabs.axelrod import AxelrodConfig, AxelrodModel
+from repro.mabs.sir import SIRConfig, SIRModel
+from repro.mabs.sis import SISConfig, SISModel
+from repro.mabs.voter import VoterConfig, VoterModel
+from repro.topology import erdos_renyi, lattice2d, ring, watts_strogatz
+
+N = 60
+
+
+def _topologies():
+    return [
+        ("ring", ring(N, 4)),
+        ("lattice", lattice2d(6, 10, neighborhood="von_neumann")),
+        ("watts_strogatz", watts_strogatz(N, 4, 0.3, jax.random.key(8))),
+    ]
+
+
+@pytest.mark.parametrize("tname,topo", _topologies())
+@pytest.mark.parametrize("seed", [0, 1])
+def test_voter_wavefront_bitexact(tname, topo, seed):
+    m = VoterModel(topo, VoterConfig(n_opinions=3))
+    st0 = m.init_state(jax.random.key(seed))
+    cfg = ProtocolConfig(window=48, strict=True)
+    w, _ = run_wavefront(m, st0, 300, seed=seed, config=cfg)
+    s = run_oracle(m, st0, 300, seed=seed, config=cfg)
+    assert bool(jnp.all(w["opinions"] == s["opinions"]))
+
+
+@pytest.mark.parametrize("tname,topo", _topologies())
+@pytest.mark.parametrize("seed", [0, 1])
+def test_sis_wavefront_bitexact(tname, topo, seed):
+    m = SISModel(topo, SISConfig(i0=0.3))
+    st0 = m.init_state(jax.random.key(seed))
+    cfg = ProtocolConfig(window=48, strict=True)
+    w, _ = run_wavefront(m, st0, 300, seed=seed, config=cfg)
+    s = run_oracle(m, st0, 300, seed=seed, config=cfg)
+    assert bool(jnp.all(w["states"] == s["states"]))
+
+
+@pytest.mark.parametrize("tname,topo", _topologies())
+def test_axelrod_network_restricted_bitexact(tname, topo):
+    m = AxelrodModel(AxelrodConfig(n_agents=N, n_features=3, q=3),
+                     topology=topo)
+    st0 = m.init_state(jax.random.key(0))
+    cfg = ProtocolConfig(window=48, strict=True)
+    w, _ = run_wavefront(m, st0, 250, seed=2, config=cfg)
+    s = run_oracle(m, st0, 250, seed=2, config=cfg)
+    assert bool(jnp.all(w["traits"] == s["traits"]))
+
+
+def test_axelrod_partners_are_neighbors():
+    topo = watts_strogatz(N, 4, 0.3, jax.random.key(8))
+    m = AxelrodModel(AxelrodConfig(n_agents=N), topology=topo)
+    rec = m.create_tasks(jax.random.key(7), 0, 128)
+    adj = np.asarray(topo.adjacency())
+    src, tgt = np.asarray(rec["src"]), np.asarray(rec["tgt"])
+    assert all(adj[a, b] for a, b in zip(src, tgt))
+
+
+def test_sir_arbitrary_graph_bitexact():
+    """SIRS beyond the ring: ER contact graph, derived block adjacency."""
+    topo = erdos_renyi(120, 0.05, jax.random.key(4))
+    m = SIRModel(SIRConfig(n_agents=120, k=6, subset_size=10, i0=0.3),
+                 topology=topo)
+    st0 = m.init_state(jax.random.key(2))
+    tasks = m.cfg.tasks_per_step() * 4
+    cfg = ProtocolConfig(window=40, strict=True)
+    w, _ = run_wavefront(m, st0, tasks, seed=3, config=cfg)
+    s = run_oracle(m, st0, tasks, seed=3, config=cfg)
+    assert bool(jnp.all(w["states"] == s["states"]))
+    assert bool(jnp.all(w["new_states"] == s["new_states"]))
+
+
+def test_sis_epidemic_dynamics():
+    """Smoke the dynamics: with beta >> gamma on a connected graph the
+    infection persists; with beta = 0 it dies out."""
+    topo = ring(N, 4)
+    hot = SISModel(topo, SISConfig(beta=0.9, gamma=0.05, i0=0.3))
+    w, _ = run_wavefront(hot, hot.init_state(jax.random.key(1)), 3000,
+                         seed=0, config=ProtocolConfig(window=64))
+    assert int(jnp.sum(w["states"])) > 0
+    cold = SISModel(topo, SISConfig(beta=0.0, gamma=0.5, i0=0.3))
+    w, _ = run_wavefront(cold, cold.init_state(jax.random.key(1)), 6000,
+                         seed=0, config=ProtocolConfig(window=64))
+    assert int(jnp.sum(w["states"])) == 0
+
+
+def test_voter_reaches_consensus_on_small_graph():
+    topo = ring(8, 4)
+    m = VoterModel(topo, VoterConfig(n_opinions=2))
+    st0 = m.init_state(jax.random.key(3))
+    w, _ = run_wavefront(m, st0, 4000, seed=1,
+                         config=ProtocolConfig(window=64))
+    assert len(set(np.asarray(w["opinions"]).tolist())) == 1
