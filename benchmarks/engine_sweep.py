@@ -1,0 +1,170 @@
+"""Engine sweep: wavefront vs sharded throughput across device counts.
+
+For each scenario in {voter, SIS, Axelrod} x window size x device count,
+runs the same task stream through the ``wavefront`` (single-device) and
+``sharded`` (shard_map over the agent axis) engines and reports
+end-to-end throughput (tasks/s, scheduling + execution included) plus
+the schedule shape.
+
+Device counts are realized per subprocess via
+``--xla_force_host_platform_device_count`` so one invocation sweeps
+several mesh sizes on CPU; on a real TPU backend the script uses the
+actual devices instead (forcing host-platform devices would hide them)
+and sweeps prefixes of ``jax.devices()``.
+
+Emits BENCH_engine.json next to the repo root (or --out PATH):
+
+  {"meta": {...}, "rows": [{"model", "engine", "window", "n_devices",
+   "n_agents", "total_tasks", "tasks_per_s", "total_waves",
+   "mean_parallelism", "seconds"}, ...]}
+
+Run:  PYTHONPATH=src python benchmarks/engine_sweep.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+
+def _inner(args) -> None:
+    """Runs inside one subprocess with a fixed device count."""
+    import jax
+
+    from repro.engine import make_engine
+    from repro.mabs.axelrod import AxelrodConfig, AxelrodModel
+    from repro.mabs.sis import SISModel
+    from repro.mabs.voter import VoterModel
+    from repro.topology import watts_strogatz
+    from repro.utils.timing import median_time
+
+    n = args.n
+    topo = watts_strogatz(n, 4, 0.1, jax.random.key(0))
+    models = {
+        "voter": VoterModel(topo),
+        "sis": SISModel(topo),
+        "axelrod": AxelrodModel(AxelrodConfig(n_agents=n, n_features=3)),
+    }
+    rows = []
+    for mname, model in models.items():
+        state = model.init_state(jax.random.key(1))
+        for window in args.windows:
+            total = window * args.windows_per_run
+            for ename in ("wavefront", "sharded"):
+                if ename == "sharded" and jax.device_count() == 1 \
+                        and args.skip_sharded_1dev:
+                    continue
+                eng = make_engine(ename, model, window=window)
+                _, stats = eng.run(state, total, seed=2)  # warmup + stats
+                sec = median_time(lambda: eng.run(state, total, seed=2)[0],
+                                  repeats=args.repeats, warmup=0)
+                rows.append({
+                    "model": mname,
+                    "engine": ename,
+                    "window": int(window),
+                    "n_devices": jax.device_count(),
+                    "n_agents": int(n),
+                    "total_tasks": int(total),
+                    "tasks_per_s": float(total / sec),
+                    "total_waves": int(stats["total_waves"]),
+                    "mean_parallelism": float(stats["mean_parallelism"]),
+                    "seconds": float(sec),
+                })
+                print("ROW " + json.dumps(rows[-1]), flush=True)
+
+
+def _spawn(device_count: int, argv) -> list[dict]:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={device_count} "
+        + env.get("XLA_FLAGS", "")).strip()
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(repo, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    p = subprocess.run([sys.executable, os.path.abspath(__file__),
+                        "--run-inner", *argv],
+                       capture_output=True, text=True, env=env)
+    if p.returncode != 0:
+        raise RuntimeError(f"inner sweep (d={device_count}) failed:\n"
+                           + p.stderr[-4000:])
+    rows = [json.loads(line[4:]) for line in p.stdout.splitlines()
+            if line.startswith("ROW ")]
+    for r in rows:
+        print(f"{r['model']:8s} {r['engine']:10s} W={r['window']:5d} "
+              f"d={r['n_devices']} {r['tasks_per_s']:10.0f} tasks/s "
+              f"par={r['mean_parallelism']:6.2f}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=1024, help="agents")
+    ap.add_argument("--windows", type=int, nargs="+", default=[128, 256])
+    ap.add_argument("--devices", type=int, nargs="+", default=[1, 4, 8])
+    ap.add_argument("--windows-per-run", type=int, default=4)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--skip-sharded-1dev", action="store_true",
+                    help="skip the sharded engine on 1-device meshes")
+    ap.add_argument("--run-inner", action="store_true", help=argparse.SUPPRESS)
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_engine.json"))
+    args = ap.parse_args()
+    if args.quick:
+        args.n, args.windows, args.devices = 256, [64, 128], [1, 8]
+        args.windows_per_run, args.repeats = 2, 1
+
+    if args.run_inner:
+        _inner(args)
+        return
+
+    inner_argv = (["--n", str(args.n), "--windows",
+                   *map(str, args.windows),
+                   "--windows-per-run", str(args.windows_per_run),
+                   "--repeats", str(args.repeats)]
+                  + (["--skip-sharded-1dev"] if args.skip_sharded_1dev
+                     else []))
+
+    import jax  # after arg parsing: the parent keeps its default devices
+
+    on_tpu = jax.default_backend() == "tpu"
+    rows = []
+    if on_tpu:
+        # guarded TPU path: host-platform device forcing would hide the
+        # real chips, so run the sweep in-process on the actual mesh
+        import io
+        from contextlib import redirect_stdout
+
+        buf = io.StringIO()
+        with redirect_stdout(buf):
+            _inner(args)
+        rows = [json.loads(line[4:]) for line in buf.getvalue().splitlines()
+                if line.startswith("ROW ")]
+        print(buf.getvalue(), end="")
+    else:
+        for d in args.devices:
+            rows.extend(_spawn(d, inner_argv))
+
+    payload = {
+        "meta": {
+            "n_agents": args.n,
+            "windows": [int(w) for w in args.windows],
+            # from the rows, not the request: on TPU the sweep runs on the
+            # one real mesh regardless of --devices
+            "device_counts": sorted({r["n_devices"] for r in rows}),
+            "backend": "tpu" if on_tpu else "cpu",
+            "virtual_devices": not on_tpu,
+            "strict": True,
+        },
+        "rows": rows,
+    }
+    out = os.path.abspath(args.out)
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {out} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,46 +1,42 @@
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-"""Distributed MABS: the wavefront engine with the simulation state sharded
-over a device mesh — the full TPU execution story for the paper's protocol.
+"""Distributed MABS: the sharded execution engine — the paper's protocol
+crossing the device boundary.
 
-Agents (the variable set V) are sharded over the 'data' axis; each wave's
-batched execution runs SPMD: gathers of interacting agents' rows become
-small collectives, the trait-update scatter stays local to the owning
-shard. The trajectory is asserted bit-identical to the single-device run —
+The ``sharded`` engine shards agent state into contiguous row blocks over
+a 1-D ("agents",) mesh and executes each wave under shard_map: state
+shards are all-gathered (a wave reads arbitrary neighbors), each device
+runs only the tasks whose write targets fall in its rows (the model's
+``task_write_agents`` ownership contract), and keeps its local block of
+the result. Recipes, conflict matrix, and wave levels stay replicated —
+they are window-local. The trajectory is asserted bit-identical to the
+single-device wavefront engine and hence to sequential execution —
 distribution, like wavefront scheduling itself, is semantics-free.
 
 Usage:  PYTHONPATH=src python examples/distributed_mabs.py
 """
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import ProtocolConfig, run_wavefront
-from repro.mabs.axelrod import AxelrodConfig, AxelrodModel
+from repro.core import ProtocolConfig, run_engine
+from repro.mabs.voter import VoterModel
+from repro.topology import watts_strogatz
 
 
 def main():
-    n_dev = len(jax.devices())
-    mesh = jax.make_mesh((n_dev,), ("data",))
-    print(f"devices: {n_dev}")
-
-    model = AxelrodModel(AxelrodConfig(n_agents=1024, n_features=32, q=3))
+    print(f"devices: {len(jax.devices())}")
+    model = VoterModel(watts_strogatz(1024, 4, 0.1, jax.random.key(0)))
     cfg = ProtocolConfig(window=256, strict=True)
-
-    # single-device reference
     state0 = model.init_state(jax.random.key(0))
-    ref, _ = run_wavefront(model, state0, 2_000, seed=1, config=cfg)
 
-    # sharded run: traits [N, F] split over agents
-    sharded0 = jax.device_put(
-        state0, {"traits": NamedSharding(mesh, P("data", None))})
-    with mesh:
-        out, stats = run_wavefront(model, sharded0, 2_000, seed=1,
-                                   config=cfg)
-    same = bool(jnp.all(out["traits"] == ref["traits"]))
-    shards = len(out["traits"].sharding.device_set)
-    print(f"state sharded over {shards} devices; "
+    ref, _ = run_engine(model, state0, 2_000, seed=1, config=cfg,
+                        engine="wavefront")
+    out, stats = run_engine(model, state0, 2_000, seed=1, config=cfg,
+                            engine="sharded")
+
+    same = bool(jnp.all(out["opinions"] == ref["opinions"]))
+    print(f"sharded over {stats['n_devices']} devices; "
           f"mean wave parallelism {stats['mean_parallelism']:.1f}")
     print(f"bit-identical to single-device trajectory: {same}")
     assert same

@@ -2,14 +2,19 @@
 
   model.py      — recipe/record model interface (paper §3.5)
   records.py    — vectorized worker records: prefix-conflict matrices
-  wavefront.py  — SPMD wavefront engine (TPU-native adaptation)
+  wavefront.py  — per-window wave execution primitive (SPMD adaptation)
   chain.py      — bidirectional task chain (paper §3.3)
   workersim.py  — paper-faithful n-worker discrete-event simulator
   protocol.py   — high-level API
+
+Streaming execution lives behind the engine registry (``repro.engine``):
+sequential oracle, single-device wavefront, and the multi-device sharded
+engine share the primitives here.
 """
 from repro.core.model import MABSModel, footprint_conflicts
 from repro.core.protocol import (
     ProtocolConfig,
+    run_engine,
     run_oracle,
     run_wavefront,
     simulate_protocol,
@@ -21,10 +26,13 @@ from repro.core.records import (
     wave_levels_capped,
     window_conflicts,
 )
-from repro.core.wavefront import WavefrontRunner, execute_window, run_sequential
+from repro.core.wavefront import execute_window
 from repro.core.workersim import DESCosts, DESModel, DESResult, ProtocolSimulator
+from repro.engine.sequential import run_sequential
+from repro.engine.wavefront import WavefrontRunner
 
 __all__ = [
+    "run_engine",
     "MABSModel",
     "footprint_conflicts",
     "window_conflicts",

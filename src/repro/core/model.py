@@ -99,6 +99,18 @@ class MABSModel(abc.ABC):
         broadcasts footprints)."""
         return None
 
+    def task_write_agents(self, recipes: Recipes) -> jax.Array | None:
+        """Optional [W, nt] int32 *state-row* indices each task writes
+        (-1 = unused slot). This is the sharded engine's ownership
+        contract: a task executes on every device whose agent-row block
+        contains at least one of its write targets. Distinct from
+        ``task_footprint``, whose ids may live in abstract spaces (e.g.
+        SIRS block ids over two buffers); return None (the default) when
+        write targets are not state rows — the sharded engine then runs
+        every task on every device (redundant compute, identical result).
+        """
+        return None
+
     def conflicts(self, a: Recipes, b: Recipes, *, strict: bool = True) -> jax.Array:
         """Pairwise predicate: does later task ``a`` conflict with earlier
         task ``b``? Broadcasts: a has shape [...,1]-style leading dims vs b.

@@ -1,43 +1,58 @@
 """High-level protocol API — binds a MABS model to an execution engine.
 
-Three engines over the same model:
-
-  * ``run_wavefront``  — SPMD wavefront engine (production path; TPU target).
-  * ``run_sequential`` — chain-order oracle (correctness reference).
-  * ``simulate_protocol`` — paper-faithful discrete-event simulation of the
-    n-worker shared-memory workflow (reproduces the paper's T(s, n) figures).
+Engines are pluggable (``repro.engine``): ``sequential`` (the oracle),
+``wavefront`` (single-device vectorized waves), ``sharded`` (waves
+sharded over the agent axis of a device mesh), plus the paper-faithful
+discrete-event simulator. All array engines run the identical task
+stream; under the strict hazard rule they are bit-exact vs each other.
 
 The paper's "choices in applying the protocol" (§3.4) map to:
   chain granularity  -> the model's task definition (e.g. agents per subset)
   task depth         -> what create_tasks precomputes (ids + PRNG binding)
-  workflow params    -> n_workers, C (DES); window size (wavefront engine)
+  workflow params    -> n_workers, C (DES); window size + engine choice
+                        (wavefront/sharded engines)
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from typing import Any
 
-from repro.core.wavefront import WavefrontRunner, run_sequential
 from repro.core.workersim import DESCosts, DESModel, ProtocolSimulator
 
 
 @dataclass
 class ProtocolConfig:
-    window: int = 256          # recipe-window size (wavefront engine)
+    window: int = 256          # recipe-window size (windowed engines)
     n_workers: int = 4         # n  (DES engine)
     tasks_per_cycle: int = 6   # C  (DES engine; paper keeps C=6)
     strict: bool = True        # full hazard closure vs paper's record rule
+    engine: str = "wavefront"  # registry name (repro.engine)
+
+
+def run_engine(model, state, total_tasks: int, *, seed: int = 0,
+               config: ProtocolConfig | None = None,
+               engine: str | None = None, **engine_kwargs):
+    """Run total_tasks through the engine named by ``engine`` (or
+    ``config.engine``); extra kwargs go to the engine constructor (e.g.
+    ``devices=...`` for the sharded engine). Returns (state, stats)."""
+    from repro.engine import make_engine
+
+    cfg = config or ProtocolConfig()
+    eng = make_engine(engine or cfg.engine, model, window=cfg.window,
+                      strict=cfg.strict, **engine_kwargs)
+    return eng.run(state, total_tasks, seed=seed)
 
 
 def run_wavefront(model, state, total_tasks: int, *, seed: int = 0,
                   config: ProtocolConfig | None = None):
-    cfg = config or ProtocolConfig()
-    runner = WavefrontRunner(model, window=cfg.window, strict=cfg.strict)
-    return runner.run(state, total_tasks, seed=seed)
+    return run_engine(model, state, total_tasks, seed=seed,
+                      config=config, engine="wavefront")
 
 
 def run_oracle(model, state, total_tasks: int, *, seed: int = 0,
                config: ProtocolConfig | None = None):
+    from repro.engine.sequential import run_sequential
+
     cfg = config or ProtocolConfig()
     return run_sequential(model, state, total_tasks, seed=seed,
                           window=cfg.window)

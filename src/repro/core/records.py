@@ -14,7 +14,6 @@ kernels/conflict implements the id-matching variant with 128×128 tiling.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable
 
 import jax
@@ -68,8 +67,8 @@ def window_conflicts(model, recipes, valid: jax.Array, *,
     return prefix_conflicts(model.conflicts, recipes, valid, strict=strict)
 
 
-@partial(jax.jit, static_argnames=())
-def wave_levels(conflicts: jax.Array, valid: jax.Array) -> jax.Array:
+def wave_levels(conflicts: jax.Array, valid: jax.Array, *,
+                backend: str | None = None) -> jax.Array:
     """DAG-level (wavefront) assignment.
 
         level[i] = 1 + max{ level[j] : j < i, C[i, j] }   (else 0)
@@ -82,20 +81,14 @@ def wave_levels(conflicts: jax.Array, valid: jax.Array) -> jax.Array:
     Sequential-equivalence argument: executing levels in ascending order is
     a topological order of the (strict) dependence DAG restricted to the
     window, and commuting tasks may be reordered freely (paper §3.2).
+
+    Implementation lives in kernels/levels — the blocked Pallas kernel on
+    TPU, the reference ``lax.scan`` elsewhere (backend auto-detect, like
+    the conflict kernel).
     """
-    w = conflicts.shape[0]
+    from repro.kernels.levels.ops import wave_levels as _wave_levels
 
-    def body(levels, i):
-        row = conflicts[i]  # [W] bools over earlier tasks
-        dep_levels = jnp.where(row, levels, -1)
-        lvl = jnp.max(dep_levels, initial=-1) + 1
-        lvl = jnp.where(valid[i], lvl, -1)
-        levels = levels.at[i].set(lvl)
-        return levels, None
-
-    levels0 = jnp.full((w,), -1, dtype=jnp.int32)
-    levels, _ = jax.lax.scan(body, levels0, jnp.arange(w))
-    return levels
+    return _wave_levels(conflicts, valid, backend=backend)
 
 
 def wave_levels_capped(conflicts, valid, n_workers: int):

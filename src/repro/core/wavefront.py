@@ -1,15 +1,18 @@
-"""Wavefront execution engine — the SPMD realization of the paper's protocol.
+"""Wave-at-a-time window execution — the SPMD core of the protocol.
 
-Given a window of recipes and their wave levels, executes the window one wave
-at a time; each wave is a single vectorized (vmap-style, shard_map-able)
-masked batch. Semantics: identical to sequential chain execution (tested by
-property tests), because waves are executed in topological order and tasks
-within a wave commute.
+Given a window of recipes and their wave levels, executes the window one
+wave at a time; each wave is a single vectorized (vmap-style,
+shard_map-able) masked batch. Semantics: identical to sequential chain
+execution (tested by property tests), because waves are executed in
+topological order and tasks within a wave commute.
+
+The streaming runners that used to live here (``WavefrontRunner``,
+``run_sequential``) moved behind the execution-engine registry in
+``repro.engine`` — which also adds the multi-device ``sharded`` engine;
+this module keeps the per-window primitive they share plus
+backwards-compatible re-exports.
 """
 from __future__ import annotations
-
-from functools import partial
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -21,9 +24,11 @@ def execute_window(model, state, recipes, valid, *, strict: bool = True,
                    levels: jax.Array | None = None):
     """Execute one window of tasks by waves. Returns (state, n_waves).
 
-    Scheduling (the conflict matrix) routes through the model's footprint
-    protocol when available — Pallas kernel on TPU, fused jnp fallback on
-    CPU — and through the legacy broadcast predicate otherwise.
+    Scheduling (the conflict matrix and the wave levels) routes through
+    the model's footprint protocol when available — conflict and levels
+    Pallas kernels on TPU, fused jnp fallbacks on CPU — and through the
+    legacy broadcast predicate otherwise. Pass precomputed ``levels`` to
+    split scheduling from execution (the engines' window pipeline does).
     """
     if levels is None:
         conf = window_conflicts(model, recipes, valid, strict=strict)
@@ -65,73 +70,13 @@ def window_schedule_stats(model, recipes, valid, *, strict: bool = True):
     }
 
 
-class WavefrontRunner:
-    """Streaming engine: create a window (<= the paper's C·n creation
-    quantum), schedule it, execute by waves, repeat. The window boundary is
-    a conservative barrier, so cross-window ordering is trivially preserved.
-    """
+def __getattr__(name):  # PEP 562 — lazy to avoid a core <-> engine cycle
+    if name == "WavefrontRunner":
+        from repro.engine.wavefront import WavefrontRunner
 
-    def __init__(self, model, *, window: int = 256, strict: bool = True,
-                 jit: bool = True):
-        self.model = model
-        self.window = int(window)
-        self.strict = strict
+        return WavefrontRunner
+    if name == "run_sequential":
+        from repro.engine.sequential import run_sequential
 
-        def _step(state, base_key, start_index):
-            recipes = model.create_tasks(base_key, start_index, self.window)
-            valid = jnp.ones((self.window,), dtype=bool)
-            state, n_waves = execute_window(model, state, recipes, valid,
-                                            strict=self.strict)
-            return state, n_waves
-
-        def _step_partial(state, base_key, start_index, count):
-            recipes = model.create_tasks(base_key, start_index, self.window)
-            valid = jnp.arange(self.window) < count
-            state, n_waves = execute_window(model, state, recipes, valid,
-                                            strict=self.strict)
-            return state, n_waves
-
-        self._step = jax.jit(_step) if jit else _step
-        self._step_partial = (
-            jax.jit(_step_partial) if jit else _step_partial
-        )
-
-    def run(self, state: Any, total_tasks: int, *, seed: int = 0):
-        """Run total_tasks tasks; returns (state, stats)."""
-        base_key = jax.random.key(seed)
-        t = 0
-        total_waves = 0
-        n_windows = 0
-        while t < total_tasks:
-            k = min(self.window, total_tasks - t)
-            if k == self.window:
-                state, n_waves = self._step(state, base_key, t)
-            else:
-                state, n_waves = self._step_partial(state, base_key, t, k)
-            total_waves += int(n_waves)
-            n_windows += 1
-            t += k
-        stats = {
-            "total_tasks": total_tasks,
-            "n_windows": n_windows,
-            "total_waves": total_waves,
-            "mean_parallelism": total_tasks / max(total_waves, 1),
-        }
-        return state, stats
-
-
-def run_sequential(model, state, total_tasks: int, *, seed: int = 0,
-                   window: int = 256):
-    """Oracle runner: same task stream, strictly sequential execution."""
-    base_key = jax.random.key(seed)
-    t = 0
-    seq = jax.jit(
-        lambda st, key, start, count: model.execute_sequential(
-            st, model.create_tasks(key, start, window), count
-        )
-    )
-    while t < total_tasks:
-        k = min(window, total_tasks - t)
-        state = seq(state, base_key, t, k)
-        t += k
-    return state
+        return run_sequential
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,7 +1,15 @@
 """Logical-axis sharding rules for the production mesh.
 
-Mesh axes: ("pod", "data", "model") multi-pod or ("data", "model") single
-pod. Policy (DESIGN.md §8):
+Two mesh families live here:
+
+  * the LM training/serving mesh — ("pod", "data", "model") multi-pod or
+    ("data", "model") single pod (policy below), and
+  * the MABS agent mesh — a 1-D ("agents",) mesh for the sharded
+    wavefront engine (repro.engine.sharded): agent-state leaves lead
+    with the agent axis and shard into contiguous row blocks; window
+    -local scheduling objects stay replicated (docs/engine.md).
+
+LM policy (DESIGN.md §8):
 
   * batch                      -> (pod, data)          [DP]
   * attention heads / kv heads -> model                [TP] when divisible
@@ -26,6 +34,34 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.utils.pytree import tree_map_with_path_str
+
+
+# --------------------------------------------------------------------------
+# MABS agent mesh (repro.engine.sharded)
+
+AGENT_AXIS = "agents"
+
+
+def agents_mesh(devices=None) -> Mesh:
+    """1-D mesh over the agent axis for the sharded wavefront engine."""
+    devices = jax.devices() if devices is None else list(devices)
+    return Mesh(np.asarray(devices), (AGENT_AXIS,))
+
+
+def agent_pspec(ndim: int) -> P:
+    """Leading-axis (agent) sharding; trailing dims replicated."""
+    return P(AGENT_AXIS, *([None] * (ndim - 1)))
+
+
+def agent_state_shardings(state: Any, mesh: Mesh):
+    """NamedShardings for an agent-state pytree (every leaf leads with
+    the agent axis — the sharded engine's state contract)."""
+    return jax.tree_util.tree_map(
+        lambda x: NamedSharding(mesh, agent_pspec(x.ndim)), state)
+
+
+# --------------------------------------------------------------------------
+# LM training/serving mesh
 
 
 def _axis_size(mesh: Mesh, name: str) -> int:

@@ -1,0 +1,36 @@
+"""Pluggable execution engines for the wavefront protocol.
+
+  base.py       — ``Engine`` interface, registry, shared windowed loop
+  sequential.py — chain-order oracle (``sequential``)
+  wavefront.py  — single-device vectorized waves (``wavefront``)
+  sharded.py    — shard_map over the agent axis (``sharded``)
+
+All engines run the identical task stream and are bit-exact under the
+strict hazard rule; pick by name through ``make_engine`` (or
+``ProtocolConfig.engine`` at the ``repro.core`` API level).
+"""
+from repro.engine.base import (
+    ENGINES,
+    Engine,
+    WindowedEngine,
+    get_engine,
+    make_engine,
+    register_engine,
+)
+from repro.engine.sequential import SequentialEngine, run_sequential
+from repro.engine.sharded import ShardedEngine
+from repro.engine.wavefront import WavefrontEngine, WavefrontRunner
+
+__all__ = [
+    "ENGINES",
+    "Engine",
+    "WindowedEngine",
+    "get_engine",
+    "make_engine",
+    "register_engine",
+    "SequentialEngine",
+    "run_sequential",
+    "ShardedEngine",
+    "WavefrontEngine",
+    "WavefrontRunner",
+]

@@ -1,0 +1,145 @@
+"""Execution-engine interface and registry.
+
+An *engine* binds a ``MABSModel`` to a way of actually running its task
+chain: strictly sequentially (the oracle), by vectorized waves on one
+device, or by waves sharded over the agent axis of a device mesh. All
+engines consume the identical task stream (``create_tasks`` keyed by the
+global chain index) and — by the protocol's sequential-equivalence
+argument — produce bit-identical state for the strict hazard rule, so the
+choice of engine is a pure performance decision.
+
+Registry:
+
+    from repro.engine import make_engine
+    eng = make_engine("sharded", model, window=256)
+    state, stats = eng.run(state, total_tasks, seed=0)
+
+``WindowedEngine`` additionally fixes the streaming structure shared by
+the wavefront and sharded engines: windows of W tasks, each scheduled
+(conflict matrix + wave levels, both replicated window-local objects) and
+then executed wave by wave — with a double-buffered *window pipeline*:
+the schedule for window t+1 is dispatched before the engine blocks on
+window t's execution, so the O(W²) record check of the next window
+overlaps the wave execution of the current one on the device queue.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Any, Type
+
+import jax
+import jax.numpy as jnp
+
+ENGINES: dict[str, Type["Engine"]] = {}
+
+
+def register_engine(cls: Type["Engine"]) -> Type["Engine"]:
+    """Class decorator: add an Engine subclass to the registry."""
+    assert cls.name not in ENGINES or ENGINES[cls.name] is cls, cls.name
+    ENGINES[cls.name] = cls
+    return cls
+
+
+def get_engine(name: str) -> Type["Engine"]:
+    try:
+        return ENGINES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown engine {name!r}; registered: {sorted(ENGINES)}"
+        ) from None
+
+
+def make_engine(name: str, model, **kwargs) -> "Engine":
+    return get_engine(name)(model, **kwargs)
+
+
+class Engine(abc.ABC):
+    """One way of executing a model's task chain."""
+
+    #: registry key
+    name: str = "engine"
+
+    def __init__(self, model, *, window: int = 256, strict: bool = True):
+        self.model = model
+        self.window = int(window)
+        self.strict = strict
+
+    @abc.abstractmethod
+    def run(self, state: Any, total_tasks: int, *, seed: int = 0
+            ) -> tuple[Any, dict]:
+        """Execute total_tasks tasks from the chain; returns (state, stats).
+
+        stats always carries ``total_tasks``, ``n_windows``,
+        ``total_waves`` and ``mean_parallelism``; engines may add keys.
+        """
+
+
+class WindowedEngine(Engine):
+    """Shared streaming loop: schedule window t+1 while window t executes.
+
+    Subclasses provide
+      * ``_schedule(base_key, start, count)`` — create + schedule one
+        window; returns an opaque pytree (dispatched asynchronously), and
+      * ``_execute(state, sched)`` — execute one scheduled window;
+        returns (state, n_waves),
+    plus optional ``_prepare_state`` / ``_finalize_state`` hooks (e.g. the
+    sharded engine pads and device_puts the agent axis there). The run
+    loop never blocks between windows: the only host sync is the final
+    stats reduction after the last window was dispatched.
+    """
+
+    def _prepare_state(self, state):
+        return state
+
+    def _finalize_state(self, state):
+        return state
+
+    def _schedule_window(self, base_key, start, count):
+        """The shared scheduling recipe: create one window of tasks and
+        reduce it to wave levels (conflict + levels kernels, backend
+        auto-detected). Returns (recipes, valid, levels)."""
+        from repro.core.records import wave_levels, window_conflicts
+
+        recipes = self.model.create_tasks(base_key, start, self.window)
+        valid = jnp.arange(self.window) < count
+        conf = window_conflicts(self.model, recipes, valid,
+                                strict=self.strict)
+        return recipes, valid, wave_levels(conf, valid)
+
+    def _schedule(self, base_key, start, count):  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def _execute(self, state, sched):  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def run(self, state: Any, total_tasks: int, *, seed: int = 0):
+        base_key = jax.random.key(seed)
+        state = self._prepare_state(state)
+        t = 0
+        n_windows = 0
+        wave_counts = []
+        nxt = self._schedule(base_key, 0, min(self.window, total_tasks))
+        while t < total_tasks:
+            k = min(self.window, total_tasks - t)
+            cur = nxt
+            if t + k < total_tasks:
+                # double buffering: dispatch window t+1's schedule (conflict
+                # matrix + levels) before blocking on window t's execution
+                nxt = self._schedule(
+                    base_key, t + k, min(self.window, total_tasks - t - k))
+            state, n_waves = self._execute(state, cur)
+            wave_counts.append(n_waves)
+            n_windows += 1
+            t += k
+        total_waves = int(sum(int(w) for w in wave_counts))  # host sync here
+        state = self._finalize_state(state)
+        stats = {
+            "total_tasks": total_tasks,
+            "n_windows": n_windows,
+            "total_waves": total_waves,
+            "mean_parallelism": total_tasks / max(total_waves, 1),
+        }
+        return state, self._extend_stats(stats)
+
+    def _extend_stats(self, stats: dict) -> dict:
+        return stats

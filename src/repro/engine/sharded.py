@@ -1,0 +1,146 @@
+"""Multi-device wavefront engine: waves sharded over the agent axis.
+
+First step across the device boundary (ROADMAP: "shard the wavefront
+engine"), following the window-local replication layout:
+
+  * **agent state** — every state leaf leads with the agent axis; leaves
+    are sharded into contiguous row blocks over a 1-D ``("agents",)``
+    mesh (padded up when the device count does not divide N). Sharded
+    state buffers are donated from window to window.
+  * **window-local objects** — recipes, validity, the conflict matrix and
+    the wave levels are O(W)/O(W²) *per-window* objects, so they stay
+    replicated: scheduling runs once (conflict kernel + levels kernel,
+    backend auto-detected) and its outputs are broadcast to the mesh.
+
+Per wave, inside ``shard_map``:
+
+  1. ``all_gather`` the state shards into the full agent state (the wave
+     reads arbitrary neighbors, so reads need the whole state);
+  2. restrict the wave mask to *owned* tasks — via the model's
+     ``task_write_agents`` contract, a task is executed on every device
+     whose row block contains at least one of its write targets (models
+     without the contract run every task everywhere: redundant compute,
+     identical result);
+  3. run the model's vectorized ``execute_wave`` on the gathered state;
+  4. keep only the local row block of the result.
+
+Every device therefore applies exactly the updates that land in its rows,
+and the union over devices is exactly the single-device wave — the engine
+is bit-exact vs the sequential oracle under the strict rule
+(property-tested under 8 virtual devices).
+
+The ``WindowedEngine`` loop double-buffers windows: window t+1's schedule
+is dispatched before the engine blocks on window t's waves.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import (
+    AGENT_AXIS as AXIS,
+    agent_state_shardings,
+    agents_mesh,
+)
+from repro.engine.base import WindowedEngine, register_engine
+from repro.utils.compat import shard_map
+
+
+@register_engine
+class ShardedEngine(WindowedEngine):
+    name = "sharded"
+
+    def __init__(self, model, *, window: int = 256, strict: bool = True,
+                 devices=None, jit: bool = True):
+        super().__init__(model, window=window, strict=strict)
+        self.mesh = agents_mesh(devices)
+        self.n_devices = self.mesh.devices.size
+        self._jit = jit
+        self._built_for: int | None = None  # n_agents the fns were built for
+
+        def _schedule(base_key, start, count):
+            recipes, _, levels = self._schedule_window(base_key, start, count)
+            return recipes, levels, model.task_write_agents(recipes)
+
+        self._schedule = jax.jit(_schedule) if jit else _schedule
+
+    # ------------------------------------------------------------ build
+    def _build(self, n_agents: int):
+        """Compile the sharded window executor for one agent count."""
+        if self._built_for == n_agents:
+            return
+        model, d = self.model, self.n_devices
+        n_pad = -(-n_agents // d) * d
+        shard_n = n_pad // d
+
+        def _pad(x):
+            return jnp.pad(x, [(0, n_pad - n_agents)]
+                           + [(0, 0)] * (x.ndim - 1))
+
+        def window_local(local_state, recipes, levels, write_agents):
+            # runs per-device inside shard_map; local leaves are [N/d, ...]
+            lo = jax.lax.axis_index(AXIS) * shard_n
+            n_waves = jnp.max(levels) + 1
+
+            def body(carry):
+                w, loc = carry
+                full = jax.tree_util.tree_map(
+                    lambda x: jax.lax.all_gather(
+                        x, AXIS, axis=0, tiled=True)[:n_agents], loc)
+                mask = levels == w
+                if write_agents is not None:
+                    owned = jnp.any(
+                        (write_agents >= lo) & (write_agents < lo + shard_n),
+                        axis=-1)
+                    mask = mask & owned
+                new = model.execute_wave(full, recipes, mask)
+                loc = jax.tree_util.tree_map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(
+                        _pad(x), lo, shard_n, axis=0), new)
+                return w + 1, loc
+
+            _, local_state = jax.lax.while_loop(
+                lambda c: c[0] < n_waves, body,
+                (jnp.int32(0), local_state))
+            return local_state, n_waves
+
+        window_sharded = shard_map(
+            window_local, mesh=self.mesh,
+            in_specs=(P(AXIS), P(), P(), P()),
+            out_specs=(P(AXIS), P()),
+            check_vma=False)
+
+        def _execute(state, sched):
+            recipes, levels, write_agents = sched
+            return window_sharded(state, recipes, levels, write_agents)
+
+        self._execute = (jax.jit(_execute, donate_argnums=(0,))
+                         if self._jit else _execute)
+        self._n_agents, self._n_pad = n_agents, n_pad
+        self._built_for = n_agents
+
+    # ------------------------------------------------------- state hooks
+    def _prepare_state(self, state):
+        leaves = jax.tree_util.tree_leaves(state)
+        assert leaves, "empty state"
+        n = leaves[0].shape[0]
+        assert all(x.shape[0] == n for x in leaves), (
+            "sharded engine expects every state leaf to lead with the "
+            f"agent axis; got shapes {[x.shape for x in leaves]}")
+        self._build(n)
+        n_pad = self._n_pad
+        padded = jax.tree_util.tree_map(
+            lambda x: jnp.pad(x, [(0, n_pad - n)] + [(0, 0)] * (x.ndim - 1)),
+            state)
+        return jax.device_put(padded, agent_state_shardings(padded, self.mesh))
+
+    def _finalize_state(self, state):
+        return jax.tree_util.tree_map(
+            lambda x: x[:self._n_agents], state)
+
+    def _extend_stats(self, stats: dict) -> dict:
+        stats["n_devices"] = self.n_devices
+        return stats

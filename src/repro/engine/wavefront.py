@@ -1,0 +1,45 @@
+"""Single-device wavefront engine (formerly ``core.wavefront
+.WavefrontRunner``, now behind the engine registry).
+
+Streams the chain through windows of W tasks: each window is scheduled
+(prefix-conflict matrix through the conflict kernel, wave levels through
+the levels kernel — backend auto-detected) and executed one vectorized
+wave at a time. The window boundary is a conservative barrier, so
+cross-window ordering is trivially preserved; the shared
+``WindowedEngine`` loop overlaps window t+1's scheduling with window t's
+execution.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.engine.base import WindowedEngine, register_engine
+
+
+@register_engine
+class WavefrontEngine(WindowedEngine):
+    name = "wavefront"
+
+    def __init__(self, model, *, window: int = 256, strict: bool = True,
+                 jit: bool = True):
+        super().__init__(model, window=window, strict=strict)
+        # deferred so `import repro.engine` works before repro.core's
+        # package init has run (core's init imports this module for the
+        # WavefrontRunner compat re-export)
+        from repro.core.wavefront import execute_window
+
+        def _execute(state, sched):
+            recipes, valid, levels = sched
+            return execute_window(model, state, recipes, valid,
+                                  strict=self.strict, levels=levels)
+
+        # NB: no donation here — callers hand this engine externally owned
+        # state (and often reuse it for the oracle run); the sharded engine
+        # donates because it owns its device_put copy.
+        self._schedule = (jax.jit(self._schedule_window) if jit
+                          else self._schedule_window)
+        self._execute = jax.jit(_execute) if jit else _execute
+
+
+#: Backwards-compatible name for the pre-registry runner class.
+WavefrontRunner = WavefrontEngine

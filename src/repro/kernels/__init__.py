@@ -7,7 +7,10 @@ Each subpackage ships three files:
 
 Kernels:
   conflict — W×W prefix-conflict bitmask over task id-footprints (the
-             protocol's O(W²) record check, paper §3.5)
+             protocol's O(W²) record check, paper §3.5); triangular
+             1-D tile walk via scalar prefetch
+  levels   — blocked wave-level assignment over the conflict matrix
+             (replaces the per-task scan on the scheduling path)
   axelrod  — one wave of pairwise cultural interactions (paper §4.1)
   sir      — one wave of ring-graph SIRS subset updates (paper §4.2)
   wkv6     — RWKV6 data-dependent-decay time-mix (chunked recurrence)

@@ -6,10 +6,22 @@ intersects task j's write set. On TPU this is a perfectly regular integer
 compare over a [W, W] tile grid — VPU work with no MXU involvement, tiled
 128×128 so each block's operands live in VMEM:
 
-  per (bi, bj) grid cell:
+  per (bi, bj) tile:
     rows: read_ids[bi·B : , :nr], write_ids[bi·B : , :nw]   (task i side)
     cols: read_ids[bj·B : , :nr], write_ids[bj·B : , :nw]   (task j side)
     out:  conflict int32 block [B, B]
+
+The matrix is strictly lower-triangular, so tiles strictly above the block
+diagonal (bj > bi) are identically zero. The grid is therefore a 1-D walk
+over the n(n+1)/2 tiles with bj <= bi (n = W/B tile rows), with the
+(bi, bj) coordinates of each step delivered through scalar-prefetch lookup
+tables — instead of the dense n² grid, a 2× tile-count reduction at large
+W (e.g. W=1024, B=128: 36 tiles instead of 64; W=4096: 528 instead of
+1024). The never-visited upper tiles hold uninitialized memory and are
+zeroed by one fused elementwise mask after the kernel (the in-kernel
+global-index mask still handles the diagonal tiles' upper halves and the
+padded tail, so visited tiles come out exactly as the dense grid produced
+them — bit-identical by construction and by test).
 
 Hazard semantics (shared repo-wide; see core/model.py):
 
@@ -23,12 +35,6 @@ Hazard semantics (shared repo-wide; see core/model.py):
       anti (WAR) W_i ∩ R_j hazards; the only rule that is bit-exact vs
       sequential execution.
 
-The strictly-lower-triangular + validity masking happens in-kernel using
-global indices reconstructed from the grid position, so no extra pass over
-the matrix is needed. Blocks entirely above the diagonal are still visited
-(grid is dense) but write zeros; a production refinement could prune them
-with a custom grid -> documented in EXPERIMENTS.md §Perf.
-
 Windows that are not a multiple of the tile size are padded up with -1 ids
 and invalid slots (masked in-kernel via w_total), then sliced back.
 """
@@ -38,15 +44,19 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 BLOCK = 128
 
 
 def _kernel(nr: int, nw: int, strict: bool, w_total: int,
+            bi_ref, bj_ref,
             reads_i, writes_i, reads_j, writes_j, valid_i, valid_j, out_ref):
-    bi = pl.program_id(0)
-    bj = pl.program_id(1)
+    t = pl.program_id(0)
+    bi = bi_ref[t]
+    bj = bj_ref[t]
     b = out_ref.shape[0]
 
     gi = bi * b + jax.lax.broadcasted_iota(jnp.int32, (b, b), 0)  # global i
@@ -105,23 +115,33 @@ def conflict_matrix_pallas(read_ids, write_ids, valid, *, strict: bool = True,
         read_ids = jnp.pad(read_ids, pad, constant_values=-1)
         write_ids = jnp.pad(write_ids, pad, constant_values=-1)
         valid = jnp.pad(valid, (0, w_pad - w), constant_values=False)
-    grid = (w_pad // b, w_pad // b)
+    n = w_pad // b
+    # 1-D triangular tile walk (bj <= bi), coordinates via scalar prefetch
+    bi_map, bj_map = (np.asarray(x, np.int32) for x in zip(
+        *[(bi, bj) for bi in range(n) for bj in range(bi + 1)]))
     valid_i32 = valid.astype(jnp.int32)[:, None]  # [W, 1] for clean tiling
 
-    row_spec = pl.BlockSpec((b, nr), lambda i, j: (i, 0))
-    col_spec = pl.BlockSpec((b, nr), lambda i, j: (j, 0))
-    roww_spec = pl.BlockSpec((b, nw), lambda i, j: (i, 0))
-    colw_spec = pl.BlockSpec((b, nw), lambda i, j: (j, 0))
-    vrow_spec = pl.BlockSpec((b, 1), lambda i, j: (i, 0))
-    vcol_spec = pl.BlockSpec((b, 1), lambda i, j: (j, 0))
+    row_spec = pl.BlockSpec((b, nr), lambda t, bi, bj: (bi[t], 0))
+    col_spec = pl.BlockSpec((b, nr), lambda t, bi, bj: (bj[t], 0))
+    roww_spec = pl.BlockSpec((b, nw), lambda t, bi, bj: (bi[t], 0))
+    colw_spec = pl.BlockSpec((b, nw), lambda t, bi, bj: (bj[t], 0))
+    vrow_spec = pl.BlockSpec((b, 1), lambda t, bi, bj: (bi[t], 0))
+    vcol_spec = pl.BlockSpec((b, 1), lambda t, bi, bj: (bj[t], 0))
 
-    out = pl.pallas_call(
-        functools.partial(_kernel, nr, nw, strict, w),
-        grid=grid,
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(len(bi_map),),
         in_specs=[row_spec, roww_spec, col_spec, colw_spec,
                   vrow_spec, vcol_spec],
-        out_specs=pl.BlockSpec((b, b), lambda i, j: (i, j)),
+        out_specs=pl.BlockSpec((b, b), lambda t, bi, bj: (bi[t], bj[t])),
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, nr, nw, strict, w),
+        grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((w_pad, w_pad), jnp.int32),
         interpret=interpret,
-    )(read_ids, write_ids, read_ids, write_ids, valid_i32, valid_i32)
-    return out[:w, :w]
+    )(jnp.asarray(bi_map), jnp.asarray(bj_map),
+      read_ids, write_ids, read_ids, write_ids, valid_i32, valid_i32)
+    # zero the never-visited tiles strictly above the block diagonal
+    lower = jnp.tril(jnp.ones((w_pad, w_pad), dtype=bool), k=-1)
+    return jnp.where(lower, out, 0)[:w, :w]

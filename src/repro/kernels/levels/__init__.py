@@ -1,0 +1,13 @@
+"""Wave-level (dependence-level) assignment kernel.
+
+Turns the [W, W] prefix-conflict matrix into per-task wavefront levels —
+the remaining sequential O(W) stage on the scheduling path after the
+conflict matrix itself went on the tiled Pallas kernel. The Pallas
+implementation walks the B diagonal blocks sequentially and vectorizes
+everything else over [B, W] row panels; the pure-jnp reference keeps the
+original per-task ``lax.scan``.
+"""
+from repro.kernels.levels.ops import wave_levels
+from repro.kernels.levels.ref import wave_levels_ref
+
+__all__ = ["wave_levels", "wave_levels_ref"]

@@ -1,0 +1,42 @@
+"""Public wrapper for wave-level assignment.
+
+Routes between the blocked Pallas kernel (compiled on TPU; interpreter
+elsewhere) and the reference ``lax.scan``. On CPU the scan is the default:
+Pallas interpret mode re-traces the block loop in Python, while XLA
+compiles the scan into one tight loop. On TPU the blocked kernel replaces
+W dependent scan steps with W/B sequential grid steps whose operands stay
+in VMEM.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import ON_TPU
+from repro.kernels.levels.levels import wave_levels_pallas
+from repro.kernels.levels.ref import wave_levels_ref
+
+
+def wave_levels(conflicts, valid, *, backend: str | None = None,
+                interpret: bool | None = None):
+    """Wavefront levels [W] int32 from a prefix-conflict matrix.
+
+        level[i] = 1 + max{ level[j] : j < i, C[i, j] }   (else 0)
+
+    Invalid (padded) slots get level -1. Executing levels in ascending
+    order is a topological order of the strict dependence DAG restricted
+    to the window (paper §3.2).
+
+    backend: None  — auto: Pallas (compiled) on TPU, the scan elsewhere;
+             "pallas" — force the blocked kernel (interpret per
+                        ``interpret`` arg, itself auto-detected when None);
+             "jnp"    — force the scan reference.
+    """
+    conflicts = jnp.asarray(conflicts)
+    valid = jnp.asarray(valid, bool)
+    if backend is None:
+        backend = "pallas" if ON_TPU else "jnp"
+    if backend == "jnp":
+        return wave_levels_ref(conflicts, valid)
+    if backend == "pallas":
+        return wave_levels_pallas(conflicts, valid, interpret=interpret)
+    raise ValueError(f"unknown levels backend {backend!r}")

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for wave-level assignment: the per-task ``lax.scan``.
+
+    level[i] = 1 + max{ level[j] : C[i, j] }   (else 0),  invalid -> -1
+
+Robust to arbitrary (not necessarily lower-triangular) conflict matrices:
+entries pointing at tasks not yet processed (j >= i) or at invalid tasks
+contribute the initial level -1, i.e. nothing — the same convention the
+blocked Pallas kernel reproduces.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def wave_levels_ref(conflicts: jax.Array, valid: jax.Array) -> jax.Array:
+    """[W, W] bool-ish conflicts + [W] bool valid -> [W] int32 levels."""
+    w = conflicts.shape[0]
+    conflicts = conflicts.astype(bool)
+
+    def body(levels, i):
+        row = conflicts[i]  # [W] bools over earlier tasks
+        dep_levels = jnp.where(row, levels, -1)
+        lvl = jnp.max(dep_levels, initial=-1) + 1
+        lvl = jnp.where(valid[i], lvl, -1)
+        levels = levels.at[i].set(lvl)
+        return levels, None
+
+    levels0 = jnp.full((w,), -1, dtype=jnp.int32)
+    levels, _ = jax.lax.scan(body, levels0, jnp.arange(w))
+    return levels

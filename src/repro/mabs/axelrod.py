@@ -102,6 +102,11 @@ class AxelrodModel(MABSModel):
         writes = recipes["tgt"][..., None]
         return reads, writes
 
+    def task_write_agents(self, recipes):
+        """The interaction writes (at most) one feature of the target's
+        trait row — the sharded engine's ownership key is tgt."""
+        return recipes["tgt"][..., None]
+
     def conflicts(self, a, b, *, strict: bool = True):
         """later a vs earlier b (broadcasting pytrees of id arrays).
 

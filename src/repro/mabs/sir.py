@@ -141,6 +141,18 @@ class SIRModel(MABSModel):
         writes = jnp.where(ttype == 1, subset, m + subset)[..., None]
         return reads.astype(jnp.int32), writes.astype(jnp.int32)
 
+    def task_write_agents(self, recipes):
+        """Agent rows written, for the sharded engine's ownership test.
+
+        Unlike ``task_footprint`` (block ids over two abstract id spaces),
+        these are actual state-row indices: task (subset, type) writes the
+        contiguous rows [subset*s, (subset+1)*s) — of ``new_states`` for a
+        compute, of ``states`` for a commit; both leaves shard identically
+        so the buffer distinction doesn't matter for ownership."""
+        s = self.cfg.subset_size
+        offs = jnp.arange(s, dtype=jnp.int32)
+        return recipes["subset"][..., None] * s + offs
+
     def conflicts(self, a, b, *, strict: bool = True):
         """later a vs earlier b — hand-written reference for the
         footprint-derived default (property-tested identical)."""

@@ -69,6 +69,10 @@ class SISModel(MABSModel):
             [v[..., None], self.topology.neighbors[v]], axis=-1)
         return reads.astype(jnp.int32), v[..., None]
 
+    def task_write_agents(self, recipes):
+        """Writes land in row v — the sharded engine's ownership key."""
+        return recipes["v"][..., None]
+
     # --------------------------------------------------------- execution
     def execute_wave(self, state, recipes, mask):
         cfg = self.cfg

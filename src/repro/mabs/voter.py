@@ -69,6 +69,10 @@ class VoterModel(MABSModel):
         """R = {u} (the copied opinion), W = {v} (the updated agent)."""
         return recipes["u"][..., None], recipes["v"][..., None]
 
+    def task_write_agents(self, recipes):
+        """Writes land in row v — the sharded engine's ownership key."""
+        return recipes["v"][..., None]
+
     # --------------------------------------------------------- execution
     def execute_wave(self, state, recipes, mask):
         opinions = state["opinions"]

@@ -1,0 +1,85 @@
+"""Engine registry + single-device engine equivalences (the multi-device
+sharded checks run in subprocesses — see test_engine_sharded.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ProtocolConfig, run_engine, run_oracle, run_wavefront
+from repro.engine import (
+    ENGINES,
+    Engine,
+    SequentialEngine,
+    ShardedEngine,
+    WavefrontEngine,
+    get_engine,
+    make_engine,
+)
+from repro.mabs.voter import VoterModel
+from repro.topology import ring, watts_strogatz
+
+
+def test_registry_contents():
+    assert {"sequential", "wavefront", "sharded"} <= set(ENGINES)
+    assert get_engine("wavefront") is WavefrontEngine
+    assert get_engine("sequential") is SequentialEngine
+    assert get_engine("sharded") is ShardedEngine
+    with pytest.raises(ValueError, match="unknown engine"):
+        get_engine("gpu-magic")
+
+
+def test_make_engine_and_interface():
+    m = VoterModel(ring(32, 4))
+    eng = make_engine("wavefront", m, window=16)
+    assert isinstance(eng, Engine)
+    assert eng.window == 16
+    st = m.init_state(jax.random.key(0))
+    out, stats = eng.run(st, 40, seed=0)
+    assert stats["total_tasks"] == 40 and stats["n_windows"] == 3
+    assert out["opinions"].shape == st["opinions"].shape
+
+
+@pytest.mark.parametrize("total", [64, 100])  # full windows and partial tail
+def test_wavefront_engine_bitexact(total):
+    m = VoterModel(watts_strogatz(64, 4, 0.2, jax.random.key(5)))
+    st0 = m.init_state(jax.random.key(1))
+    cfg = ProtocolConfig(window=32, strict=True)
+    wf, stats = run_wavefront(m, st0, total, seed=2, config=cfg)
+    sq = run_oracle(m, st0, total, seed=2, config=cfg)
+    assert bool(jnp.all(wf["opinions"] == sq["opinions"]))
+    assert stats["total_waves"] >= 1
+
+
+def test_run_engine_routes_by_config_and_kwarg():
+    m = VoterModel(ring(32, 4))
+    st0 = m.init_state(jax.random.key(0))
+    cfg = ProtocolConfig(window=16, engine="sequential")
+    seq, stats = run_engine(m, st0, 20, seed=0, config=cfg)
+    assert stats["mean_parallelism"] == 1.0
+    wf, wstats = run_engine(m, st0, 20, seed=0, config=cfg,
+                            engine="wavefront")
+    assert bool(jnp.all(seq["opinions"] == wf["opinions"]))
+    assert wstats["mean_parallelism"] >= 1.0
+
+
+def test_sharded_engine_exact_on_default_mesh():
+    """The sharded engine is exact on whatever mesh the process sees —
+    1 device in the tier-1 run, 8 in the multi-device CI job (its full
+    multi-device sweep runs in the subprocess tests)."""
+    m = VoterModel(ring(48, 4))
+    st0 = m.init_state(jax.random.key(3))
+    cfg = ProtocolConfig(window=32, strict=True)
+    sh, stats = run_engine(m, st0, 70, seed=1, config=cfg, engine="sharded")
+    sq = run_oracle(m, st0, 70, seed=1, config=cfg)
+    assert bool(jnp.all(sh["opinions"] == sq["opinions"]))
+    assert stats["n_devices"] == jax.device_count()
+
+
+def test_sharded_engine_does_not_clobber_caller_state():
+    """Donation must only ever touch the engine's own device_put copy."""
+    m = VoterModel(ring(48, 4))
+    st0 = m.init_state(jax.random.key(3))
+    before = np.asarray(st0["opinions"]).copy()
+    run_engine(m, st0, 64, seed=0,
+               config=ProtocolConfig(window=32), engine="sharded")
+    assert (np.asarray(st0["opinions"]) == before).all()

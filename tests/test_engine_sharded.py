@@ -1,0 +1,114 @@
+"""Multi-device sharded-engine tests — run in subprocesses with 8 host
+devices (the main test process must keep the default 1-device view).
+
+Acceptance sweep: ShardedEngine bit-exact vs the sequential oracle on
+voter and SIS over ring / lattice / Watts-Strogatz topologies, for full
+and partial windows, including an agent count the device count does not
+divide (exercising the padded shard path).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_py(code: str, timeout=560):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    p = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    assert p.returncode == 0, p.stderr[-4000:]
+    return p.stdout
+
+
+@pytest.mark.parametrize("model", ["voter", "sis"])
+def test_sharded_bitexact_topology_sweep(model):
+    out = run_py(f"""
+        import jax, jax.numpy as jnp
+        assert jax.device_count() == 8, jax.device_count()
+        from repro.core import ProtocolConfig, run_engine, run_oracle
+        from repro.mabs.sis import SISModel
+        from repro.mabs.voter import VoterModel
+        from repro.topology import lattice2d, ring, watts_strogatz
+
+        make = {{"voter": VoterModel, "sis": SISModel}}["{model}"]
+        cfg = ProtocolConfig(window=64, strict=True)
+        topos = {{
+            # n=100: 8 does not divide -> padded shard path
+            "ring": ring(100, 4),
+            "lattice": lattice2d(10, 10, neighborhood="von_neumann"),
+            "watts_strogatz": watts_strogatz(128, 4, 0.1, jax.random.key(2)),
+        }}
+        for name, topo in topos.items():
+            m = make(topo)
+            st0 = m.init_state(jax.random.key(7))
+            # 128 = two full windows; 150 adds a partial tail window
+            for total in (128, 150):
+                sh, stats = run_engine(m, st0, total, seed=3, config=cfg,
+                                       engine="sharded")
+                sq = run_oracle(m, st0, total, seed=3, config=cfg)
+                leaf = next(iter(st0))
+                assert stats["n_devices"] == 8
+                assert bool(jnp.all(sh[leaf] == sq[leaf])), (name, total)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_sharded_bitexact_axelrod_and_sir():
+    """Beyond the acceptance matrix: the ownership contract also covers
+    Axelrod (per-feature writes) and SIRS (contiguous block writes over
+    two state buffers)."""
+    out = run_py("""
+        import jax, jax.numpy as jnp
+        assert jax.device_count() == 8
+        from repro.core import ProtocolConfig, run_engine, run_oracle
+        from repro.mabs.axelrod import AxelrodConfig, AxelrodModel
+        from repro.mabs.sir import SIRConfig, SIRModel
+
+        cfg = ProtocolConfig(window=64, strict=True)
+        m = AxelrodModel(AxelrodConfig(n_agents=41, n_features=3, q=3))
+        st0 = m.init_state(jax.random.key(0))
+        sh, _ = run_engine(m, st0, 100, seed=1, config=cfg, engine="sharded")
+        sq = run_oracle(m, st0, 100, seed=1, config=cfg)
+        assert bool(jnp.all(sh["traits"] == sq["traits"]))
+
+        m = SIRModel(SIRConfig(n_agents=400, k=6, subset_size=25))
+        st0 = m.init_state(jax.random.key(0))
+        sh, _ = run_engine(m, st0, 64, seed=1, config=cfg, engine="sharded")
+        sq = run_oracle(m, st0, 64, seed=1, config=cfg)
+        assert bool(jnp.all(sh["states"] == sq["states"]))
+        assert bool(jnp.all(sh["new_states"] == sq["new_states"]))
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_sharded_strict_only_guarantee_documented():
+    """Under the paper's non-strict record rule the engines may diverge
+    from the oracle (missing anti-dependences) — but sharded and
+    single-device wavefront must still agree with *each other*: sharding
+    is a layout transform of the same wave schedule."""
+    out = run_py("""
+        import jax, jax.numpy as jnp
+        assert jax.device_count() == 8
+        from repro.core import ProtocolConfig, run_engine
+        from repro.mabs.voter import VoterModel
+        from repro.topology import watts_strogatz
+
+        m = VoterModel(watts_strogatz(128, 4, 0.2, jax.random.key(9)))
+        st0 = m.init_state(jax.random.key(4))
+        cfg = ProtocolConfig(window=64, strict=False)
+        sh, _ = run_engine(m, st0, 150, seed=5, config=cfg, engine="sharded")
+        wf, _ = run_engine(m, st0, 150, seed=5, config=cfg,
+                           engine="wavefront")
+        assert bool(jnp.all(sh["opinions"] == wf["opinions"]))
+        print("OK")
+    """)
+    assert "OK" in out
