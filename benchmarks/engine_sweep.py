@@ -1,10 +1,14 @@
 """Engine sweep: wavefront vs sharded throughput across device counts.
 
 For each scenario in {voter, SIS, Axelrod} x window size x device count,
-runs the same task stream through the ``wavefront`` (single-device) and
-``sharded`` (shard_map over the agent axis) engines and reports
-end-to-end throughput (tasks/s, scheduling + execution included) plus
-the schedule shape.
+runs the same task stream through the ``wavefront`` (single-device),
+``sharded`` (halo-exchange shard_map over the agent axis) and
+``sharded_replicated`` (full-state all_gather) engines and reports
+end-to-end throughput (tasks/s, scheduling + execution included), the
+schedule shape, and — for the sharded engines — the per-wave
+communication volume (gathered rows / payload bytes per device vs the
+full state), so BENCH_engine.json captures the halo comm win alongside
+tasks/s.
 
 Device counts are realized per subprocess via
 ``--xla_force_host_platform_device_count`` so one invocation sweeps
@@ -52,8 +56,8 @@ def _inner(args) -> None:
         state = model.init_state(jax.random.key(1))
         for window in args.windows:
             total = window * args.windows_per_run
-            for ename in ("wavefront", "sharded"):
-                if ename == "sharded" and jax.device_count() == 1 \
+            for ename in ("wavefront", "sharded", "sharded_replicated"):
+                if ename.startswith("sharded") and jax.device_count() == 1 \
                         and args.skip_sharded_1dev:
                     continue
                 eng = make_engine(ename, model, window=window)
@@ -71,6 +75,12 @@ def _inner(args) -> None:
                     "total_waves": int(stats["total_waves"]),
                     "mean_parallelism": float(stats["mean_parallelism"]),
                     "seconds": float(sec),
+                    # comm-volume accounting (sharded engines only)
+                    "halo": stats.get("halo"),
+                    "per_wave_gather_rows": stats.get("per_wave_gather_rows"),
+                    "per_wave_comm_bytes": stats.get("per_wave_comm_bytes"),
+                    "full_state_bytes": stats.get("full_state_bytes"),
+                    "comm_bytes_total": stats.get("comm_bytes_total"),
                 })
                 print("ROW " + json.dumps(rows[-1]), flush=True)
 
@@ -92,15 +102,22 @@ def _spawn(device_count: int, argv) -> list[dict]:
     rows = [json.loads(line[4:]) for line in p.stdout.splitlines()
             if line.startswith("ROW ")]
     for r in rows:
-        print(f"{r['model']:8s} {r['engine']:10s} W={r['window']:5d} "
+        comm = ("" if r.get("per_wave_comm_bytes") is None else
+                f" comm/wave={r['per_wave_comm_bytes']:>8d}B"
+                f" (full={r['full_state_bytes']}B)")
+        print(f"{r['model']:8s} {r['engine']:18s} W={r['window']:5d} "
               f"d={r['n_devices']} {r['tasks_per_s']:10.0f} tasks/s "
-              f"par={r['mean_parallelism']:6.2f}")
+              f"par={r['mean_parallelism']:6.2f}{comm}")
     return rows
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--n", type=int, default=1024, help="agents")
+    # default sized so the halo beats the full state for every scenario:
+    # the widest halo below is SIS at W=256 with nr = max_degree+1 on the
+    # WS(n, 4, 0.1) graph (max_degree ~8-10) -> ~256·(10+1+1) ≈ 3k rows,
+    # which must stay < n for the halo layout to engage
+    ap.add_argument("--n", type=int, default=4096, help="agents")
     ap.add_argument("--windows", type=int, nargs="+", default=[128, 256])
     ap.add_argument("--devices", type=int, nargs="+", default=[1, 4, 8])
     ap.add_argument("--windows-per-run", type=int, default=4)

@@ -1,7 +1,15 @@
-"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from artifacts.
+"""Render benchmark artifacts as markdown tables.
 
-Usage: PYTHONPATH=src python -m benchmarks.report [artifacts/dryrun]
-Writes markdown to stdout (EXPERIMENTS.md embeds the output).
+Two report families share this entry point:
+
+  * LM dry-run/roofline (the historic default):
+      PYTHONPATH=src python -m benchmarks.report [artifacts/dryrun]
+  * MABS protocol benchmarks — aggregates BENCH_topology.json and
+    BENCH_engine.json (scheduling parallelism, sparse-builder scaling,
+    engine throughput + halo comm volume) into one markdown report:
+      PYTHONPATH=src python -m benchmarks.report mabs [repo-root]
+
+Writes markdown to stdout (EXPERIMENTS.md / docs embed the output).
 """
 from __future__ import annotations
 
@@ -86,7 +94,93 @@ def roofline_table(recs, mesh="single"):
                   f"| {row['roofline_fraction']:.3f} | {note} |")
 
 
+# --------------------------------------------------------------------------
+# MABS protocol report (BENCH_topology.json + BENCH_engine.json)
+
+
+def _load_bench(root, name):
+    path = os.path.join(root, name)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def _fmt_kb(b):
+    if b is None:
+        return "—"
+    return f"{b / 1024:.1f} KiB" if b >= 1024 else f"{b} B"
+
+
+def mabs_topology_tables(bench):
+    meta, rows = bench["meta"], bench["rows"]
+    sched = [r for r in rows if r.get("kind", "schedule") == "schedule"]
+    builds = [r for r in rows if r.get("kind") == "build"]
+    if sched:
+        print(f"\n#### Scheduling parallelism "
+              f"(n = {meta.get('n_nodes')}, backend = "
+              f"{meta.get('backend')}, strict rule)\n")
+        print("| topology | model | W | waves | mean par | conflict dens"
+              " | sched ms/window |")
+        print("|---|---|---|---|---|---|---|")
+        for r in sched:
+            print(f"| {r['topology']} | {r['model']} | {r['window']} "
+                  f"| {r['n_waves']} | {r['mean_parallelism']:.2f} "
+                  f"| {r['conflict_density']:.4f} "
+                  f"| {r['sched_seconds'] * 1e3:.2f} |")
+    if builds:
+        print("\n#### Sparse builder scaling "
+              "(edge-list path, no [n, n] allocation)\n")
+        print("| topology | n | build s | edges | max deg "
+              "| SIS sched ms/window |")
+        print("|---|---|---|---|---|---|")
+        for r in builds:
+            sched_ms = (f"{r['sched_seconds'] * 1e3:.2f}"
+                        if "sched_seconds" in r else "—")
+            print(f"| {r['topology']} | {r['n_nodes']:,} "
+                  f"| {r['build_seconds']:.2f} | {r['n_edges']:,} "
+                  f"| {r['max_degree']} | {sched_ms} |")
+
+
+def mabs_engine_table(bench):
+    meta, rows = bench["meta"], bench["rows"]
+    print(f"\n#### Engine throughput and comm volume "
+          f"(n = {meta.get('n_agents')} agents, backend = "
+          f"{meta.get('backend')}"
+          f"{', virtual devices' if meta.get('virtual_devices') else ''})\n")
+    print("| model | W | devices | engine | tasks/s | mean par "
+          "| comm/wave/device | full state | comm reduction |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        comm = r.get("per_wave_comm_bytes")
+        full = r.get("full_state_bytes")
+        red = (f"{full / comm:.1f}×" if comm and full
+               and r.get("halo") else "—")
+        print(f"| {r['model']} | {r['window']} | {r['n_devices']} "
+              f"| {r['engine']} | {r['tasks_per_s']:,.0f} "
+              f"| {r['mean_parallelism']:.2f} | {_fmt_kb(comm)} "
+              f"| {_fmt_kb(full)} | {red} |")
+
+
+def mabs_report(root="."):
+    print("### MABS protocol benchmarks (generated by benchmarks/report.py)")
+    topo = _load_bench(root, "BENCH_topology.json")
+    eng = _load_bench(root, "BENCH_engine.json")
+    if topo is None and eng is None:
+        print("\n(no BENCH_topology.json / BENCH_engine.json found under "
+              f"{os.path.abspath(root)} — run benchmarks/topology_sweep.py "
+              "and benchmarks/engine_sweep.py first)")
+        return
+    if topo is not None:
+        mabs_topology_tables(topo)
+    if eng is not None:
+        mabs_engine_table(eng)
+
+
 def main():
+    if len(sys.argv) > 1 and sys.argv[1] == "mabs":
+        mabs_report(sys.argv[2] if len(sys.argv) > 2 else ".")
+        return
     d = sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun"
     recs = load(d)
     print("### §Dry-run results (generated by benchmarks/report.py)")

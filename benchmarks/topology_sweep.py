@@ -9,11 +9,20 @@ For each topology family x model (voter, SIS, SIRS) x window size:
   * scheduling overhead: median wall time of the jitted conflict-matrix +
     wave-level pass (the protocol's O(W^2) term) per window.
 
+A second section benchmarks the sparse edge-list *builders* at large N
+(``--build-ns``, default 10^5 and 10^6): wall time to construct each
+random family plus one SIS window scheduled on the built Watts-Strogatz
+graph — the end-to-end evidence that 10^6-node networks construct and
+schedule on CPU without any [n, n] allocation.
+
 Emits BENCH_topology.json next to this file (or --out PATH):
 
-  {"meta": {...}, "rows": [{"model", "topology", "window", "n_tasks",
-   "n_waves", "mean_parallelism", "conflict_density", "sched_seconds",
-   "max_degree", "n_edges"}, ...]}
+  {"meta": {...}, "rows": [
+    {"kind": "schedule", "model", "topology", "window", "n_tasks",
+     "n_waves", "mean_parallelism", "conflict_density", "sched_seconds",
+     "max_degree", "n_edges"},
+    {"kind": "build", "topology", "n_nodes", "build_seconds", "n_edges",
+     "max_degree", "sched_seconds"?}, ...]}
 
 Run:  PYTHONPATH=src python benchmarks/topology_sweep.py [--quick]
 """
@@ -96,6 +105,7 @@ def run(n: int, windows, *, seed: int = 0):
             for w in windows:
                 r = bench_one(model, w, seed=seed)
                 r.update({
+                    "kind": "schedule",
                     "model": mname,
                     "topology": tname,
                     "window": int(w),
@@ -110,24 +120,72 @@ def run(n: int, windows, *, seed: int = 0):
     return rows
 
 
+def run_builds(build_ns, *, window: int = 256, seed: int = 0):
+    """Sparse-builder scaling rows: construction wall time per family at
+    each n, plus one SIS window scheduled on the built Watts-Strogatz
+    graph (the large-N scheduling smoke, in the artifact)."""
+    import time
+
+    rows = []
+    for n in build_ns:
+        key = jax.random.key(seed)
+        side = int(round(n ** 0.5))
+        builders = {
+            "ring_k4": lambda: ring(n, 4),
+            "lattice_vn": lambda: lattice2d(side, n // side),
+            "watts_strogatz": lambda: watts_strogatz(n, 4, 0.1, key),
+            "erdos_renyi": lambda: erdos_renyi(n, 4.0 / n, key),
+            "barabasi_albert": lambda: barabasi_albert(n, 2, key),
+        }
+        for tname, build in builders.items():
+            t0 = time.perf_counter()
+            topo = build()
+            topo.neighbors.block_until_ready()
+            dt = time.perf_counter() - t0
+            row = {
+                "kind": "build",
+                "topology": tname,
+                "n_nodes": int(topo.n_nodes),
+                "build_seconds": float(dt),
+                "n_edges": int(topo.n_edges),
+                "max_degree": int(topo.max_degree),
+            }
+            if tname == "watts_strogatz":
+                # bounded-degree graph: one scheduled SIS window on top
+                row.update(bench_one(SISModel(topo), window, seed=seed))
+                row["kind"] = "build"
+                row["window"] = int(window)
+            rows.append(row)
+            sched = (f" sched={row['sched_seconds']*1e3:7.2f}ms"
+                     if "sched_seconds" in row else "")
+            print(f"build  {tname:16s} n={n:8d} "
+                  f"{dt:7.2f}s edges={row['n_edges']:9d}{sched}")
+    return rows
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=1024, help="nodes (square)")
     ap.add_argument("--windows", type=int, nargs="+",
                     default=[64, 256, 1024])
+    ap.add_argument("--build-ns", type=int, nargs="*",
+                    default=[100_000, 1_000_000],
+                    help="builder-scaling sizes (empty to skip)")
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "..", "BENCH_topology.json"))
     args = ap.parse_args()
-    n, windows = args.n, args.windows
+    n, windows, build_ns = args.n, args.windows, args.build_ns
     if args.quick:
-        n, windows = 256, [64, 256]
+        n, windows, build_ns = 256, [64, 256], [10_000]
 
     rows = run(n, windows)
+    rows.extend(run_builds(build_ns))
     payload = {
         "meta": {
             "n_nodes": n,
             "windows": [int(w) for w in windows],
+            "build_ns": [int(b) for b in build_ns],
             "backend": jax.default_backend(),
             "strict": True,
         },

@@ -5,14 +5,16 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 crossing the device boundary.
 
 The ``sharded`` engine shards agent state into contiguous row blocks over
-a 1-D ("agents",) mesh and executes each wave under shard_map: state
-shards are all-gathered (a wave reads arbitrary neighbors), each device
-runs only the tasks whose write targets fall in its rows (the model's
-``task_write_agents`` ownership contract), and keeps its local block of
-the result. Recipes, conflict matrix, and wave levels stay replicated —
-they are window-local. The trajectory is asserted bit-identical to the
-single-device wavefront engine and hence to sequential execution —
-distribution, like wavefront scheduling itself, is semantics-free.
+a 1-D ("agents",) mesh and executes each wave under shard_map: each wave
+gathers only its *halo* — the window's read ∪ write rows, derived at
+schedule time from the model's ``task_read_agents``/``task_write_agents``
+contracts — instead of all-gathering the O(N) state; each device runs
+only the tasks whose write targets fall in its rows and keeps its local
+block of the result. Recipes, conflict matrix, wave levels, and the halo
+list stay replicated — they are window-local. The trajectory is asserted
+bit-identical to the single-device wavefront engine and hence to
+sequential execution — distribution, like wavefront scheduling itself,
+is semantics-free.
 
 Usage:  PYTHONPATH=src python examples/distributed_mabs.py
 """
@@ -38,6 +40,9 @@ def main():
     same = bool(jnp.all(out["opinions"] == ref["opinions"]))
     print(f"sharded over {stats['n_devices']} devices; "
           f"mean wave parallelism {stats['mean_parallelism']:.1f}")
+    print(f"halo exchange: {stats['halo']} — per wave "
+          f"{stats['per_wave_comm_bytes']} B/device gathered "
+          f"(full state would be {stats['full_state_bytes']} B)")
     print(f"bit-identical to single-device trajectory: {same}")
     assert same
     print("OK")

@@ -3,7 +3,9 @@
   base.py       — ``Engine`` interface, registry, shared windowed loop
   sequential.py — chain-order oracle (``sequential``)
   wavefront.py  — single-device vectorized waves (``wavefront``)
-  sharded.py    — shard_map over the agent axis (``sharded``)
+  sharded.py    — shard_map over the agent axis: halo-exchange comm
+                  (``sharded``) with the full-state all_gather layout as
+                  explicit fallback (``sharded_replicated``)
 
 All engines run the identical task stream and are bit-exact under the
 strict hazard rule; pick by name through ``make_engine`` (or
@@ -18,7 +20,7 @@ from repro.engine.base import (
     register_engine,
 )
 from repro.engine.sequential import SequentialEngine, run_sequential
-from repro.engine.sharded import ShardedEngine
+from repro.engine.sharded import ShardedEngine, ShardedReplicatedEngine
 from repro.engine.wavefront import WavefrontEngine, WavefrontRunner
 
 __all__ = [
@@ -31,6 +33,7 @@ __all__ = [
     "SequentialEngine",
     "run_sequential",
     "ShardedEngine",
+    "ShardedReplicatedEngine",
     "WavefrontEngine",
     "WavefrontRunner",
 ]

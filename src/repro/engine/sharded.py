@@ -1,33 +1,44 @@
 """Multi-device wavefront engine: waves sharded over the agent axis.
 
-First step across the device boundary (ROADMAP: "shard the wavefront
-engine"), following the window-local replication layout:
+Two communication layouts share one engine body:
 
-  * **agent state** — every state leaf leads with the agent axis; leaves
-    are sharded into contiguous row blocks over a 1-D ``("agents",)``
-    mesh (padded up when the device count does not divide N). Sharded
-    state buffers are donated from window to window.
-  * **window-local objects** — recipes, validity, the conflict matrix and
-    the wave levels are O(W)/O(W²) *per-window* objects, so they stay
-    replicated: scheduling runs once (conflict kernel + levels kernel,
-    backend auto-detected) and its outputs are broadcast to the mesh.
+**Halo exchange** (``sharded``, the default) — the paper's protocol only
+pays off when per-wave work *and communication* stay proportional to the
+localized update footprint. Every state leaf leads with the agent axis
+and is sharded into contiguous row blocks over a 1-D ``("agents",)``
+mesh. At schedule time (replicated, so no extra comm) the engine derives
+the window's *halo*: the flattened list of state rows any task reads or
+writes, from the model's ``task_read_agents`` / ``task_write_agents``
+contracts — degree-bounded, padded to the static width W·(nr+nw). Per
+wave, inside ``shard_map``:
 
-Per wave, inside ``shard_map``:
+  1. gather exactly the halo rows: each row has a unique owner shard;
+     owners contribute, one ``psum`` over the agent axis delivers the
+     rows everywhere — O(halo) values per device instead of the
+     all_gather's O(N);
+  2. scatter them into a full-size scratch buffer and refresh the local
+     row block from the authoritative local shard (a local copy, no
+     comm) — every row an owned task can read is now current; rows
+     outside halo ∪ local block stay stale zeros and are provably never
+     read;
+  3. restrict the wave mask to *owned* tasks (a task executes on every
+     device whose row block contains one of its write targets) and run
+     the model's vectorized ``execute_wave`` on the scratch;
+  4. keep only the local row block of the result — writes land directly
+     on their owners, so no write scatter is communicated at all.
 
-  1. ``all_gather`` the state shards into the full agent state (the wave
-     reads arbitrary neighbors, so reads need the whole state);
-  2. restrict the wave mask to *owned* tasks — via the model's
-     ``task_write_agents`` contract, a task is executed on every device
-     whose row block contains at least one of its write targets (models
-     without the contract run every task everywhere: redundant compute,
-     identical result);
-  3. run the model's vectorized ``execute_wave`` on the gathered state;
-  4. keep only the local row block of the result.
+**Replicated all_gather** (``sharded_replicated``, the fallback) — the
+historic layout: per wave, ``all_gather`` the state shards into the full
+agent state and execute on that. Models that do not declare the
+read/write row contracts route here automatically, as does any run whose
+halo would not beat the full state (halo width >= N).
 
-Every device therefore applies exactly the updates that land in its rows,
-and the union over devices is exactly the single-device wave — the engine
-is bit-exact vs the sequential oracle under the strict rule
-(property-tested under 8 virtual devices).
+Window-local objects (recipes, validity, conflict matrix, wave levels)
+are O(W)/O(W²) and stay replicated in both modes; scheduling runs once
+and its outputs broadcast to the mesh. Both modes are bit-exact vs the
+sequential oracle under the strict rule (property-tested under 8 virtual
+devices), and both report their per-wave comm volume in ``run`` stats
+(``per_wave_comm_bytes`` vs ``full_state_bytes``).
 
 The ``WindowedEngine`` loop double-buffers windows: window t+1's schedule
 is dispatched before the engine blocks on window t's waves.
@@ -44,6 +55,9 @@ from repro.distributed.sharding import (
     AGENT_AXIS as AXIS,
     agent_state_shardings,
     agents_mesh,
+    halo_gather,
+    halo_scatter,
+    window_halo,
 )
 from repro.engine.base import WindowedEngine, register_engine
 from repro.utils.compat import shard_map
@@ -53,17 +67,42 @@ from repro.utils.compat import shard_map
 class ShardedEngine(WindowedEngine):
     name = "sharded"
 
+    #: None = probe the model for the halo contracts; False = always
+    #: replicate (the ``sharded_replicated`` registry entry).
+    halo: bool | None = None
+
     def __init__(self, model, *, window: int = 256, strict: bool = True,
-                 devices=None, jit: bool = True):
+                 devices=None, jit: bool = True, halo: bool | None = None):
         super().__init__(model, window=window, strict=strict)
         self.mesh = agents_mesh(devices)
         self.n_devices = self.mesh.devices.size
         self._jit = jit
         self._built_for: int | None = None  # n_agents the fns were built for
+        if halo is not None:
+            self.halo = halo
+        self._halo_slots = 0
+        if self.halo is None or self.halo:
+            # one-shot host probe: the halo layout needs both row contracts
+            probe = model.create_tasks(jax.random.key(0), 0, 1)
+            reads = model.task_read_agents(probe)
+            writes = model.task_write_agents(probe)
+            if self.halo is None:
+                self.halo = reads is not None and writes is not None
+            elif reads is None or writes is None:
+                raise ValueError(
+                    f"halo=True needs {type(model).__name__} to implement "
+                    "both task_read_agents and task_write_agents; use the "
+                    "'sharded_replicated' engine (or halo=None auto-probe) "
+                    "for models without the row contracts")
+            if self.halo:
+                self._halo_slots = reads.shape[-1] + writes.shape[-1]
 
         def _schedule(base_key, start, count):
             recipes, _, levels = self._schedule_window(base_key, start, count)
-            return recipes, levels, model.task_write_agents(recipes)
+            writes = model.task_write_agents(recipes)
+            halo_idx = (window_halo(model.task_read_agents(recipes), writes)
+                        if self.halo else None)
+            return recipes, levels, writes, halo_idx
 
         self._schedule = jax.jit(_schedule) if jit else _schedule
 
@@ -75,21 +114,39 @@ class ShardedEngine(WindowedEngine):
         model, d = self.model, self.n_devices
         n_pad = -(-n_agents // d) * d
         shard_n = n_pad // d
+        halo_width = self.window * self._halo_slots
+        # degenerate halo (>= full state): replication ships fewer bytes
+        use_halo = self.halo and halo_width < n_agents
 
         def _pad(x):
             return jnp.pad(x, [(0, n_pad - n_agents)]
                            + [(0, 0)] * (x.ndim - 1))
 
-        def window_local(local_state, recipes, levels, write_agents):
+        def window_local(local_state, recipes, levels, write_agents, halo):
             # runs per-device inside shard_map; local leaves are [N/d, ...]
             lo = jax.lax.axis_index(AXIS) * shard_n
+            local_rows = lo + jnp.arange(shard_n)
             n_waves = jnp.max(levels) + 1
+
+            def read_view(loc):
+                """Every row the wave's owned tasks may read, fresh."""
+                if not use_halo:
+                    return jax.tree_util.tree_map(
+                        lambda x: jax.lax.all_gather(
+                            x, AXIS, axis=0, tiled=True)[:n_agents], loc)
+
+                def one(x):
+                    g = halo_gather(x, halo, shard_n=shard_n)
+                    scratch = jnp.zeros((n_agents,) + x.shape[1:], x.dtype)
+                    scratch = halo_scatter(scratch, halo, g)
+                    # local block is authoritative — refresh it so the
+                    # end-of-wave slice keeps unwritten rows exact
+                    return scratch.at[local_rows].set(x, mode="drop")
+                return jax.tree_util.tree_map(one, loc)
 
             def body(carry):
                 w, loc = carry
-                full = jax.tree_util.tree_map(
-                    lambda x: jax.lax.all_gather(
-                        x, AXIS, axis=0, tiled=True)[:n_agents], loc)
+                full = read_view(loc)
                 mask = levels == w
                 if write_agents is not None:
                     owned = jnp.any(
@@ -109,17 +166,21 @@ class ShardedEngine(WindowedEngine):
 
         window_sharded = shard_map(
             window_local, mesh=self.mesh,
-            in_specs=(P(AXIS), P(), P(), P()),
+            in_specs=(P(AXIS), P(), P(), P(), P()),
             out_specs=(P(AXIS), P()),
             check_vma=False)
 
         def _execute(state, sched):
-            recipes, levels, write_agents = sched
-            return window_sharded(state, recipes, levels, write_agents)
+            recipes, levels, write_agents, halo = sched
+            if halo is None:   # replicated mode schedules carry no halo
+                halo = jnp.full((1,), -1, jnp.int32)
+            return window_sharded(state, recipes, levels, write_agents, halo)
 
         self._execute = (jax.jit(_execute, donate_argnums=(0,))
                          if self._jit else _execute)
         self._n_agents, self._n_pad = n_agents, n_pad
+        self._halo_active = bool(use_halo)
+        self._gather_rows = halo_width if use_halo else n_pad
         self._built_for = n_agents
 
     # ------------------------------------------------------- state hooks
@@ -132,6 +193,10 @@ class ShardedEngine(WindowedEngine):
             f"agent axis; got shapes {[x.shape for x in leaves]}")
         self._build(n)
         n_pad = self._n_pad
+        # per-agent-row bytes across leaves -> comm accounting for stats
+        row_bytes = sum(x.dtype.itemsize * int(x.size) // n for x in leaves)
+        self._comm_bytes = self._gather_rows * row_bytes
+        self._full_bytes = n_pad * row_bytes
         padded = jax.tree_util.tree_map(
             lambda x: jnp.pad(x, [(0, n_pad - n)] + [(0, 0)] * (x.ndim - 1)),
             state)
@@ -143,4 +208,22 @@ class ShardedEngine(WindowedEngine):
 
     def _extend_stats(self, stats: dict) -> dict:
         stats["n_devices"] = self.n_devices
+        stats["halo"] = self._halo_active
+        # rows delivered to each device per wave (halo list vs full state)
+        # and the matching payload bytes; comm_bytes_total accumulates the
+        # per-device receive volume over every executed wave.
+        stats["per_wave_gather_rows"] = int(self._gather_rows)
+        stats["per_wave_comm_bytes"] = int(self._comm_bytes)
+        stats["full_state_bytes"] = int(self._full_bytes)
+        stats["comm_bytes_total"] = int(self._comm_bytes) * stats["total_waves"]
         return stats
+
+
+@register_engine
+class ShardedReplicatedEngine(ShardedEngine):
+    """The historic full-state layout, kept as an explicit registry
+    fallback (and as the measurement baseline the halo engine's comm
+    stats are compared against)."""
+
+    name = "sharded_replicated"
+    halo = False

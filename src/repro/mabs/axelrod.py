@@ -107,6 +107,13 @@ class AxelrodModel(MABSModel):
         trait row — the sharded engine's ownership key is tgt."""
         return recipes["tgt"][..., None]
 
+    def task_read_agents(self, recipes):
+        """Halo contract: both trait rows are read. tgt must be listed
+        even though it is the write row — the interaction overwrites a
+        single feature, so the rest of tgt's row carries through from its
+        pre-wave value."""
+        return jnp.stack([recipes["src"], recipes["tgt"]], axis=-1)
+
     def conflicts(self, a, b, *, strict: bool = True):
         """later a vs earlier b (broadcasting pytrees of id arrays).
 

@@ -96,9 +96,10 @@ class SIRModel(MABSModel):
         assert self.topology.n_nodes == cfg.n_agents
         # Aggregate subset graph: [M]-node Topology with self loops (every
         # block adjacent to itself, block_graph guarantees it); its padded
-        # neighbor rows double as the A-tasks' read-id footprints.
+        # neighbor rows double as the A-tasks' read-id footprints. Kept
+        # in CSR form only — the dense [M, M] adjacency is guarded above
+        # DENSE_LIMIT blocks, and adjacency tests are O(degree) row scans.
         self.block_topo = self.topology.block_graph(cfg.subset_size)
-        self.block_adj = self.block_topo.adjacency()
 
     # ------------------------------------------------------------- state
     def init_state(self, rng: jax.Array):
@@ -127,7 +128,10 @@ class SIRModel(MABSModel):
 
     # -------------------------------------------------------- dependence
     def _adjacent(self, b1, b2):
-        return self.block_adj[b1, b2]
+        """CSR membership test on the aggregate graph: b2 ∈ neighbors(b1)
+        (broadcasts like the dense ``adj[b1, b2]`` lookup it replaces)."""
+        nbrs = self.block_topo.neighbors[b1]            # [..., Db]
+        return jnp.any((nbrs == b2[..., None]) & (nbrs >= 0), axis=-1)
 
     def task_footprint(self, recipes):
         """Block-granular id footprints (see module docstring):
@@ -152,6 +156,22 @@ class SIRModel(MABSModel):
         s = self.cfg.subset_size
         offs = jnp.arange(s, dtype=jnp.int32)
         return recipes["subset"][..., None] * s + offs
+
+    def task_read_agents(self, recipes):
+        """Halo contract (actual state rows, buffer-agnostic — both
+        leaves shard identically): a compute reads ``states`` over every
+        adjacent block (its agents' contact neighborhoods live there, the
+        self loop covers its own block); a commit reads ``new_states``
+        over its own block only. Rows: block ids expanded by the subset
+        size, [W, Db·s], -1 padded."""
+        s = self.cfg.subset_size
+        subset, ttype = recipes["subset"], recipes["type"]
+        nbr_blocks = self.block_topo.neighbors[subset]        # [..., Db]
+        own = jnp.full_like(nbr_blocks, -1).at[..., 0].set(subset)
+        blocks = jnp.where((ttype == 1)[..., None], own, nbr_blocks)
+        rows = blocks[..., None] * s + jnp.arange(s, dtype=jnp.int32)
+        rows = jnp.where(blocks[..., None] >= 0, rows, -1)    # [..., Db, s]
+        return rows.reshape(*subset.shape, -1).astype(jnp.int32)
 
     def conflicts(self, a, b, *, strict: bool = True):
         """later a vs earlier b — hand-written reference for the
@@ -223,7 +243,7 @@ class SIRModel(MABSModel):
                   strict: bool = True) -> DESModel:
         cfg = self.cfg
         m = cfg.n_subsets
-        block_adj = np.asarray(self.block_adj)
+        block_nbrs = np.asarray(self.block_topo.neighbors)
 
         def recipes_fn(i: int):
             step, within = divmod(i, 2 * m)
@@ -240,7 +260,8 @@ class SIRModel(MABSModel):
             return rec
 
         def adjacent(b, seen: set) -> bool:
-            return any(block_adj[b, b2] for b2 in seen)
+            row = block_nbrs[b]
+            return any(int(b2) in seen for b2 in row[row >= 0])
 
         def depends(rec, recipe):
             computes, commits = rec

@@ -73,6 +73,12 @@ class SISModel(MABSModel):
         """Writes land in row v — the sharded engine's ownership key."""
         return recipes["v"][..., None]
 
+    def task_read_agents(self, recipes):
+        """Halo contract: the footprint reads ARE state rows here —
+        {v} ∪ neighbors(v), padded neighbor row included verbatim."""
+        reads, _ = self.task_footprint(recipes)
+        return reads
+
     # --------------------------------------------------------- execution
     def execute_wave(self, state, recipes, mask):
         cfg = self.cfg

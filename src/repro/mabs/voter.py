@@ -73,6 +73,11 @@ class VoterModel(MABSModel):
         """Writes land in row v — the sharded engine's ownership key."""
         return recipes["v"][..., None]
 
+    def task_read_agents(self, recipes):
+        """Only row u is read (row v is fully overwritten), so the halo
+        each device gathers per wave is one row per owned task."""
+        return recipes["u"][..., None]
+
     # --------------------------------------------------------- execution
     def execute_wave(self, state, recipes, mask):
         opinions = state["opinions"]

@@ -1,12 +1,16 @@
 """Contact-topology subsystem: padded-CSR neighbor tables + generators.
 
   graph.py       — Topology (neighbors [N, max_deg] int32, -1 padded),
-                   block aggregation, masked gathers
+                   block aggregation, masked gathers, the segment-sorted
+                   ``from_edges`` builder (sparse path, any n)
   generators.py  — ring-k, 2D lattice (von Neumann / Moore),
                    Watts-Strogatz, Erdos-Renyi, Barabasi-Albert, complete
+                   — all edge-list based; 10^6-node graphs build on CPU
 
 The -1 padding convention is shared with the conflict kernel's id
-footprints, so neighbor rows drop directly into task read sets.
+footprints, so neighbor rows drop directly into task read sets. Dense
+[n, n] helpers (``adjacency``/``from_adjacency``) are small-n diagnostics
+and refuse above DENSE_LIMIT nodes.
 """
 from repro.topology.generators import (
     barabasi_albert,
@@ -17,11 +21,19 @@ from repro.topology.generators import (
     ring,
     watts_strogatz,
 )
-from repro.topology.graph import PAD, Topology, from_adjacency
+from repro.topology.graph import (
+    DENSE_LIMIT,
+    PAD,
+    Topology,
+    from_adjacency,
+    from_edges,
+)
 
 __all__ = [
     "Topology",
     "from_adjacency",
+    "from_edges",
+    "DENSE_LIMIT",
     "PAD",
     "ring",
     "lattice2d",

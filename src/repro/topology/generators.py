@@ -2,19 +2,29 @@
 
 Every generator is deterministic in its ``key`` and built from jnp ops, so
 it can run under jit when its shape parameters (n, max_degree, ...) are
-static. Random families (Watts-Strogatz, Erdos-Renyi, Barabasi-Albert) go
-through a dense [n, n] boolean adjacency — fine for the n <= O(10^4) regime
-these scenarios target; a sparse builder is a later scaling item.
+static. All families construct through the segment-sorted edge-list
+builder (``graph.from_edges``): edges are materialized as [E, 2] arrays,
+sorted by source, and compacted straight into the padded-CSR table —
+nothing ever allocates [n, n], so 10^6-node graphs build on CPU in
+seconds. The dense path survives only behind ``from_adjacency`` for
+small-n diagnostics (and ``complete``, which is inherently dense).
 
 Conventions: undirected simple graphs (no self loops, no multi-edges);
 neighbor rows ascend by node id; padding id is -1 (graph.PAD).
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
-from repro.topology.graph import Topology, from_adjacency
+from repro.topology.graph import (
+    Topology,
+    _check_dense,
+    from_adjacency,
+    from_edges,
+)
 
 __all__ = [
     "ring",
@@ -36,12 +46,14 @@ def connect_isolated(topo: Topology, key: jax.Array) -> Topology:
     dynamics need a cover of the whole population.
     """
     n = topo.n_nodes
-    adj = topo.adjacency()
+    v = jnp.arange(n, dtype=jnp.int32)
     iso = topo.degrees == 0
     partner = jax.random.randint(key, (n,), 0, n - 1, dtype=jnp.int32)
-    partner = jnp.where(partner >= jnp.arange(n), partner + 1, partner)
-    add = jnp.zeros_like(adj).at[jnp.arange(n), partner].set(iso)
-    return from_adjacency(adj | add | add.T)
+    partner = jnp.where(partner >= v, partner + 1, partner)
+    edges, valid = topo.edge_list()
+    patch = jnp.stack([v, jnp.where(iso, partner, -1)], axis=1)
+    return from_edges(n, jnp.concatenate([edges, patch]),
+                      valid=jnp.concatenate([valid, iso]))
 
 
 def ring(n: int, k: int) -> Topology:
@@ -60,7 +72,12 @@ def ring(n: int, k: int) -> Topology:
 def lattice2d(height: int, width: int, *, neighborhood: str = "von_neumann",
               periodic: bool = True) -> Topology:
     """2D grid, row-major node ids. von_neumann = 4-neighborhood,
-    moore = 8-neighborhood; periodic wraps at the edges (torus)."""
+    moore = 8-neighborhood; periodic wraps at the edges (torus).
+
+    Edge-list build: one [n, |offs|] candidate block, masked for open
+    boundaries; wraparound collisions on skinny grids dedup in
+    ``from_edges`` (they used to dedup through a dense adjacency).
+    """
     if neighborhood == "von_neumann":
         offs = [(-1, 0), (1, 0), (0, -1), (0, 1)]
     elif neighborhood == "moore":
@@ -81,16 +98,14 @@ def lattice2d(height: int, width: int, *, neighborhood: str = "von_neumann",
             rr, cc = rr % height, cc % width
         nbr_list.append((rr * width + cc).reshape(-1))
         mask_list.append(jnp.broadcast_to(valid, (height, width)).reshape(-1))
-    nbrs = jnp.stack(nbr_list, axis=1).astype(jnp.int32)   # [N, |offs|]
-    mask = jnp.stack(mask_list, axis=1)
-    # Non-periodic small grids / periodic 2-wide grids can produce duplicate
-    # neighbor ids (wraparound collisions); dedup through the adjacency.
     n = height * width
-    adj = jnp.zeros((n, n), dtype=bool)
-    v = jnp.repeat(jnp.arange(n, dtype=jnp.int32)[:, None], len(offs), axis=1)
-    adj = adj.at[v.reshape(-1),
-                 jnp.where(mask, nbrs, 0).reshape(-1)].max(mask.reshape(-1))
-    return from_adjacency(adj | adj.T, max_degree=len(offs))
+    src = jnp.repeat(jnp.arange(n, dtype=jnp.int32)[:, None],
+                     len(offs), axis=1)
+    dst = jnp.stack(nbr_list, axis=1).astype(jnp.int32)    # [N, |offs|]
+    mask = jnp.stack(mask_list, axis=1)
+    edges = jnp.stack([src.reshape(-1), dst.reshape(-1)], axis=1)
+    return from_edges(n, edges, valid=mask.reshape(-1),
+                      max_degree=len(offs))
 
 
 def watts_strogatz(n: int, k: int, beta: float, key: jax.Array,
@@ -100,7 +115,9 @@ def watts_strogatz(n: int, k: int, beta: float, key: jax.Array,
     Each clockwise edge (v, v+j), j = 1..k/2, is rewired with probability
     beta to (v, u) with u uniform != v. A rewire that lands on an existing
     edge is dropped (standard simple-graph variant), so degrees may vary
-    around k. max_degree defaults to a host-computed tight bound.
+    around k. max_degree defaults to a host-computed tight bound. The
+    [n, k/2] clockwise edge list feeds ``from_edges`` directly — the same
+    draws as the historic dense build, at O(n·k) memory.
     """
     assert k % 2 == 0 and 0 < k < n, "need even k with 0 < k < n"
     half = k // 2
@@ -111,55 +128,112 @@ def watts_strogatz(n: int, k: int, beta: float, key: jax.Array,
     u = jax.random.randint(k_tgt, (n, half), 0, n - 1, dtype=jnp.int32)
     u = jnp.where(u >= v, u + 1, u)                           # uniform != v
     tgt = jnp.where(rewire, u, (v + j) % n)                   # [n, half]
-
-    adj = jnp.zeros((n, n), dtype=bool)
     src = jnp.broadcast_to(v, (n, half))
-    adj = adj.at[src.reshape(-1), tgt.reshape(-1)].set(True)
-    adj = adj | adj.T
-    return from_adjacency(adj, max_degree=max_degree)
+    edges = jnp.stack([src.reshape(-1), tgt.reshape(-1)], axis=1)
+    return from_edges(n, edges, max_degree=max_degree)
 
 
 def erdos_renyi(n: int, p: float, key: jax.Array,
                 *, max_degree: int | None = None) -> Topology:
-    """G(n, p): each of the n(n-1)/2 undirected edges present w.p. p."""
-    u = jax.random.uniform(key, (n, n))
-    upper = jnp.triu(u < p, k=1)
-    adj = upper | upper.T
-    return from_adjacency(adj, max_degree=max_degree)
+    """Sparse Erdos-Renyi: edge count E ~ Binomial(n(n-1)/2, p), then the
+    first E *distinct* pairs of a uniform candidate stream (sequential
+    draw-ignore-repeats is exactly uniform sampling without replacement,
+    so this realizes G(n, m ~ Binomial) = G(n, p) — the fast equivalence
+    igraph/networkx gnm builds on). The historic per-pair Bernoulli build
+    needed an [n, n] uniform draw; this one is O(E log E), so p ~ c/n
+    graphs construct at n = 10^6.
+    """
+    n_pairs = n * (n - 1) // 2
+    mean = n_pairs * p
+    # target unique count: mean + 6 sigma covers the binomial tail
+    target = mean + 6.0 * math.sqrt(max(mean * (1.0 - p), 1.0)) + 16
+    target = min(target, float(n_pairs)) if n_pairs else 1.0
+    if target >= 0.98 * n_pairs:
+        # near-complete regime: the candidate stream can't cover the
+        # coupon-collector tail, so enumerate the pairs and Bernoulli
+        # each — exact for any p, and O(n_pairs) is proportional to the
+        # output graph itself here.
+        i, j = jnp.triu_indices(n, k=1)
+        live = jax.random.uniform(key, (n_pairs,)) < p
+        edges = jnp.stack([jnp.where(live, i.astype(jnp.int32), -1),
+                           j.astype(jnp.int32)], axis=1)
+        return from_edges(n, edges, max_degree=max_degree)
+    # candidate stream sized by the coupon-collector expectation of draws
+    # needed to see `target` distinct pairs
+    frac = target / n_pairs
+    cap = int(-n_pairs * math.log1p(-frac) * 1.05 + 64)
+    k_cnt, k_a, k_b = jax.random.split(key, 3)
+    e = jax.random.binomial(k_cnt, n=float(n_pairs), p=p).astype(jnp.int32)
+    a = jax.random.randint(k_a, (cap,), 0, n, dtype=jnp.int32)
+    b = jax.random.randint(k_b, (cap,), 0, n - 1, dtype=jnp.int32)
+    b = jnp.where(b >= a, b + 1, b)          # uniform over ordered pairs
+    lo, hi = jnp.minimum(a, b), jnp.maximum(a, b)
+    # first occurrence of each pair in *draw order*: group by pair with
+    # draw index as tiebreak, flag group heads, scatter back
+    idx = jnp.arange(cap)
+    order = jnp.lexsort((idx, hi, lo))
+    ls, lh = lo[order], hi[order]
+    head = jnp.concatenate([jnp.ones((1,), bool),
+                            (ls[1:] != ls[:-1]) | (lh[1:] != lh[:-1])])
+    first = jnp.zeros((cap,), bool).at[order].set(head)
+    live = first & (jnp.cumsum(first) - 1 < e)   # first e distinct pairs
+    edges = jnp.stack([jnp.where(live, lo, -1), hi], axis=1)
+    return from_edges(n, edges, max_degree=max_degree)
 
 
 def barabasi_albert(n: int, m: int, key: jax.Array,
                     *, max_degree: int | None = None) -> Topology:
     """Preferential attachment (Barabasi & Albert 1999): start from a
     complete seed of m+1 nodes; each arriving node attaches to m distinct
-    existing nodes sampled proportionally to degree (Gumbel top-m over
-    log-degree — exact weighted sampling without replacement).
+    existing nodes drawn from the *edge-endpoint multiset* (probability
+    proportional to degree, duplicates rejected — the standard
+    repeated-nodes realization). O(n·m) memory and O(m) expected work per
+    arrival, replacing the dense-adjacency scan that capped n at ~10^4.
     """
     assert 1 <= m < n
     seed_sz = m + 1
-    adj0 = jnp.zeros((n, n), dtype=bool)
-    seed_mask = (jnp.arange(n) < seed_sz)
-    adj0 = adj0.at[:seed_sz, :seed_sz].set(
-        ~jnp.eye(seed_sz, dtype=bool))
-    deg0 = jnp.where(seed_mask, m, 0).astype(jnp.float32)
+    si, sj = jnp.triu_indices(seed_sz, k=1)
+    seed_edges = jnp.stack([si, sj], axis=1).astype(jnp.int32)
+    n_seed_ends = seed_sz * m                       # == 2 * len(seed_edges)
+    cap = n_seed_ends + 2 * m * (n - seed_sz)       # endpoint slots, exact
+    ends0 = jnp.zeros((cap,), jnp.int32).at[:n_seed_ends].set(
+        jnp.concatenate([si, sj]).astype(jnp.int32))
 
     def attach(carry, t):
-        adj, deg = carry
-        exists = jnp.arange(n) < t                       # nodes already in
-        logits = jnp.where(exists, jnp.log(jnp.maximum(deg, 1e-9)), -jnp.inf)
-        g = jax.random.gumbel(jax.random.fold_in(key, t), (n,))
-        _, targets = jax.lax.top_k(logits + g, m)        # m distinct nodes
-        adj = adj.at[t, targets].set(True)
-        adj = adj.at[targets, t].set(True)
-        deg = deg.at[targets].add(1.0)
-        deg = deg.at[t].add(float(m))
-        return (adj, deg), None
+        ends, fill = carry
 
-    (adj, _), _ = jax.lax.scan(attach, (adj0, deg0),
-                               jnp.arange(seed_sz, n))
-    return from_adjacency(adj, max_degree=max_degree)
+        def undrawn(c):
+            return c[0] < m
+
+        def draw(c):
+            cnt, sel, kk = c
+            kk, sub = jax.random.split(kk)
+            cand = ends[jax.random.randint(sub, (), 0, fill)]
+            fresh = ~jnp.any(sel == cand)
+            sel = jnp.where(fresh, sel.at[cnt].set(cand), sel)
+            return cnt + fresh.astype(jnp.int32), sel, kk
+
+        _, targets, _ = jax.lax.while_loop(
+            undrawn, draw, (jnp.int32(0), jnp.full((m,), -1, jnp.int32),
+                            jax.random.fold_in(key, t)))
+        ends = jax.lax.dynamic_update_slice(ends, targets, (fill,))
+        ends = jax.lax.dynamic_update_slice(
+            ends, jnp.full((m,), t, jnp.int32), (fill + m,))
+        return (ends, fill + 2 * m), targets
+
+    arrivals = jnp.arange(seed_sz, n, dtype=jnp.int32)
+    (_, _), tgts = jax.lax.scan(attach, (ends0, jnp.int32(n_seed_ends)),
+                                arrivals)
+    new_edges = jnp.stack([jnp.repeat(arrivals, m), tgts.reshape(-1)],
+                          axis=1)
+    return from_edges(n, jnp.concatenate([seed_edges, new_edges]),
+                      max_degree=max_degree)
 
 
 def complete(n: int) -> Topology:
-    """Complete graph K_n (the seed Axelrod mixing assumption)."""
+    """Complete graph K_n (the seed Axelrod mixing assumption). Inherently
+    dense — the table alone is [n, n-1] — so it stays on the
+    ``from_adjacency`` diagnostics path and its size guard (checked before
+    the [n, n] argument is even allocated)."""
+    _check_dense(n, "complete()")
     return from_adjacency(jnp.ones((n, n), dtype=bool), max_degree=n - 1)

@@ -27,6 +27,21 @@ import jax.numpy as jnp
 
 PAD = -1  # unused neighbor slot; also "unused id" in the conflict kernel
 
+#: Largest node count for which dense [n, n] helpers are allowed. Above
+#: this, adjacency()/from_adjacency() would silently allocate multi-GiB
+#: boolean matrices; the sparse edge-list path (from_edges) has no limit.
+DENSE_LIMIT = 1 << 14
+
+
+def _check_dense(n: int, what: str) -> None:
+    if n > DENSE_LIMIT:
+        raise ValueError(
+            f"{what} would materialize a dense [{n}, {n}] array "
+            f"(~{n * n / 2**30:.1f} GiB as bool); refusing above "
+            f"n = {DENSE_LIMIT}. Use the padded-CSR form directly "
+            "(Topology.neighbors / from_edges) — the dense helpers exist "
+            "for small-n diagnostics only.")
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclass(frozen=True)
@@ -64,8 +79,23 @@ class Topology:
 
     # ------------------------------------------------------------- queries
     def neighbor_mask(self) -> jax.Array:
-        """[n_nodes, max_degree] bool — True where a slot holds a neighbor."""
+        """[n_nodes, max_degree] bool — True where a slot holds a neighbor.
+
+        Table-shaped (O(n · max_degree), like ``neighbors`` itself), so —
+        unlike ``adjacency()`` — it is safe at any n; the dense [n, n]
+        mask is exactly what ``adjacency()`` guards against.
+        """
         return self.neighbors >= 0
+
+    def edge_list(self) -> tuple[jax.Array, jax.Array]:
+        """(edges [n·max_degree, 2] int32, valid [n·max_degree] bool):
+        every (v, neighbor) slot of the table, one direction per slot.
+        Feeding this back through ``from_edges`` reproduces the topology;
+        generators use it to append edges without going dense."""
+        src = jnp.repeat(jnp.arange(self.n_nodes, dtype=jnp.int32),
+                         self.max_degree)
+        dst = self.neighbors.reshape(-1)
+        return jnp.stack([src, dst], axis=1), dst >= 0
 
     def gather(self, values: jax.Array, rows: jax.Array,
                fill=0) -> tuple[jax.Array, jax.Array]:
@@ -102,25 +132,28 @@ class Topology:
         edge connects them; every block is adjacent to itself. This is the
         paper's §4.2 "aggregate subset graph" generalized from the ring to
         arbitrary contact networks; SIRS-style models use it for their
-        block-granular dependence footprints.
+        block-granular dependence footprints. Built through the sparse
+        edge-list path, so it works for any n the neighbor table fits.
         """
         n, s = self.n_nodes, int(block_size)
         assert n % s == 0, "block_size must divide n_nodes"
         m = n // s
-        blk = jnp.arange(n, dtype=jnp.int32) // s                # [N]
-        nbr_blk = jnp.where(self.neighbors >= 0,
-                            self.neighbors // s, PAD)            # [N, D]
-        adj = jnp.zeros((m, m), dtype=bool)
-        rows = jnp.repeat(blk[:, None], self.max_degree, axis=1)
-        adj = adj.at[rows.reshape(-1),
-                     jnp.where(nbr_blk < 0, 0, nbr_blk).reshape(-1)].max(
-            (nbr_blk >= 0).reshape(-1))
-        adj = adj | adj.T | jnp.eye(m, dtype=bool)
-        return from_adjacency(adj, allow_self_loops=True)
+        blk_src = jnp.repeat(jnp.arange(n, dtype=jnp.int32) // s,
+                             self.max_degree)                     # [N*D]
+        blk_dst = jnp.where(self.neighbors >= 0,
+                            self.neighbors // s, PAD).reshape(-1)  # [N*D]
+        loops = jnp.arange(m, dtype=jnp.int32)
+        edges = jnp.concatenate([
+            jnp.stack([blk_src, blk_dst], axis=1),
+            jnp.stack([loops, loops], axis=1),
+        ])
+        return from_edges(m, edges, allow_self_loops=True)
 
     def adjacency(self) -> jax.Array:
-        """Dense [n, n] bool adjacency (diagnostics / small graphs)."""
+        """Dense [n, n] bool adjacency — small-n diagnostics only; raises
+        above DENSE_LIMIT nodes instead of allocating O(n²)."""
         n = self.n_nodes
+        _check_dense(n, "Topology.adjacency()")
         adj = jnp.zeros((n, n), dtype=bool)
         rows = jnp.repeat(jnp.arange(n, dtype=jnp.int32)[:, None],
                           self.max_degree, axis=1)
@@ -133,16 +166,19 @@ def from_adjacency(adj: jax.Array, *, max_degree: int | None = None,
                    allow_self_loops: bool = False) -> Topology:
     """Build a Topology from a dense boolean adjacency matrix.
 
-    Pure-jnp and jittable when ``max_degree`` is given (a static bound on
-    row degree); when None, it is computed from the concrete matrix on the
-    host. A row with more than ``max_degree`` neighbors keeps only its
-    ``max_degree`` lowest-id ones (degrees are clamped to match, so the
-    table stays self-consistent) — pick a generous bound when jitting
-    random-graph generators. Rows are packed neighbor-first via a stable
-    argsort, preserving ascending neighbor-id order within each row.
+    Small-n diagnostics path (raises above DENSE_LIMIT — use
+    ``from_edges`` for anything larger). Pure-jnp and jittable when
+    ``max_degree`` is given (a static bound on row degree); when None, it
+    is computed from the concrete matrix on the host. A row with more
+    than ``max_degree`` neighbors keeps only its ``max_degree`` lowest-id
+    ones (degrees are clamped to match, so the table stays
+    self-consistent) — pick a generous bound when jitting random-graph
+    generators. Rows are packed neighbor-first via a stable argsort,
+    preserving ascending neighbor-id order within each row.
     """
     adj = jnp.asarray(adj, dtype=bool)
     n = adj.shape[0]
+    _check_dense(n, "from_adjacency()")
     if not allow_self_loops:
         adj = adj & ~jnp.eye(n, dtype=bool)
     degrees = jnp.sum(adj, axis=1).astype(jnp.int32)
@@ -154,3 +190,64 @@ def from_adjacency(adj: jax.Array, *, max_degree: int | None = None,
     slot = jnp.arange(max_degree, dtype=jnp.int32)[None, :]
     nbrs = jnp.where(slot < degrees[:, None], order, PAD).astype(jnp.int32)
     return Topology(neighbors=nbrs, degrees=degrees)
+
+
+def from_edges(n: int, edges: jax.Array, *, max_degree: int | None = None,
+               symmetrize: bool = True, allow_self_loops: bool = False,
+               valid: jax.Array | None = None) -> Topology:
+    """Build a Topology from an [E, 2] int32 edge array — never [n, n].
+
+    The segment-sorted compaction behind every large-scale generator:
+    O(E log E) time, O(E) memory, so 10^6-node graphs build comfortably
+    on CPU. Semantics match ``from_adjacency`` exactly (tests pin the two
+    bit-identically on shared edge sets):
+
+      * an edge may appear in any direction and any number of times —
+        entries are symmetrized (unless ``symmetrize=False``, for inputs
+        that already list both directions) and duplicates collapse;
+      * entries with a negative endpoint, an endpoint >= n, or
+        ``valid[e] == False`` are dropped, so callers can pad to a static
+        E and stay jittable;
+      * self loops are dropped unless ``allow_self_loops`` (block graphs
+        carry them);
+      * ``max_degree=None`` computes the tight bound host-side (not
+        jittable); a static bound keeps the build jittable, and rows
+        beyond it keep their ``max_degree`` lowest-id neighbors with
+        degrees clamped to match;
+      * neighbor rows ascend by node id, padded with -1.
+    """
+    edges = jnp.asarray(edges, dtype=jnp.int32)
+    src, dst = edges[:, 0], edges[:, 1]
+    ok = (src >= 0) & (dst >= 0) & (src < n) & (dst < n)
+    if valid is not None:
+        ok = ok & valid
+    if not allow_self_loops:
+        ok = ok & (src != dst)
+    if symmetrize:
+        src, dst = (jnp.concatenate([src, dst]),
+                    jnp.concatenate([dst, src]))
+        ok = jnp.concatenate([ok, ok])
+    # Sentinel n sinks dropped entries past every real segment in the sort.
+    skey = jnp.where(ok, src, n)
+    dkey = jnp.where(ok, dst, n)
+    order = jnp.lexsort((dkey, skey))      # primary src, secondary dst
+    s, d = skey[order], dkey[order]
+    dup = jnp.concatenate([jnp.zeros((1,), bool),
+                           (s[1:] == s[:-1]) & (d[1:] == d[:-1])])
+    keep = (s < n) & ~dup
+    deg = jax.ops.segment_sum(keep.astype(jnp.int32), s,
+                              num_segments=n + 1)[:n]
+    if max_degree is None:
+        max_degree = max(int(jnp.max(deg)), 1) if n else 1  # host-side
+    # Slot of each kept entry within its row: rank among kept entries
+    # minus the number kept in earlier segments. Sorted order makes rows
+    # contiguous and ascending in dst, mirroring from_adjacency's packing.
+    rank = jnp.cumsum(keep.astype(jnp.int32)) - 1
+    cdeg = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(deg)])
+    slot = rank - cdeg[jnp.minimum(s, n)]
+    keep = keep & (slot < max_degree)
+    rows = jnp.where(keep, s, n)           # n = out of bounds -> dropped
+    nbrs = jnp.full((n, max_degree), PAD, dtype=jnp.int32)
+    nbrs = nbrs.at[rows, jnp.where(keep, slot, 0)].set(d, mode="drop")
+    return Topology(neighbors=nbrs,
+                    degrees=jnp.minimum(deg, max_degree).astype(jnp.int32))

@@ -90,6 +90,86 @@ def test_sharded_bitexact_axelrod_and_sir():
     assert "OK" in out
 
 
+def test_halo_comm_volume_below_full_state():
+    """The tentpole claim: with the row contracts declared, the sharded
+    engine's per-wave comm is the degree-bounded halo — strictly below
+    the full-state bytes the replicated layout ships — while staying
+    bit-exact vs the oracle. Also pins the O(max_degree · window) halo
+    width and the replicated baseline's full-state accounting."""
+    out = run_py("""
+        import jax, jax.numpy as jnp
+        assert jax.device_count() == 8
+        from repro.core import ProtocolConfig, run_engine, run_oracle
+        from repro.mabs.sis import SISModel
+        from repro.mabs.voter import VoterModel
+        from repro.topology import watts_strogatz
+
+        topo = watts_strogatz(4096, 4, 0.1, jax.random.key(2))
+        cfg = ProtocolConfig(window=128, strict=True)
+        for make, leaf, n_reads in ((VoterModel, "opinions", 1),
+                                    (SISModel, "states",
+                                     topo.max_degree + 1)):
+            m = make(topo)
+            st0 = m.init_state(jax.random.key(7))
+            sh, stats = run_engine(m, st0, 256, seed=3, config=cfg,
+                                   engine="sharded")
+            sq = run_oracle(m, st0, 256, seed=3, config=cfg)
+            assert bool(jnp.all(sh[leaf] == sq[leaf]))
+            assert stats["halo"], stats
+            # halo width = W * (reads + writes) rows, degree-bounded
+            assert stats["per_wave_gather_rows"] == 128 * (n_reads + 1)
+            assert stats["per_wave_comm_bytes"] < stats["full_state_bytes"]
+            assert stats["comm_bytes_total"] == (
+                stats["per_wave_comm_bytes"] * stats["total_waves"])
+
+            rep, rstats = run_engine(m, st0, 256, seed=3, config=cfg,
+                                     engine="sharded_replicated")
+            assert bool(jnp.all(rep[leaf] == sh[leaf]))
+            assert not rstats["halo"]
+            assert rstats["per_wave_comm_bytes"] == rstats["full_state_bytes"]
+            assert stats["per_wave_comm_bytes"] < rstats["per_wave_comm_bytes"]
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_halo_fallback_without_row_contracts():
+    """A model that declares no task_read_agents must auto-route to the
+    replicated layout (and stay exact); halo=True on such a model is a
+    loud error rather than silent wrong answers."""
+    out = run_py("""
+        import jax, jax.numpy as jnp
+        assert jax.device_count() == 8
+        from repro.core import ProtocolConfig, run_engine, run_oracle
+        from repro.engine import make_engine
+        from repro.mabs.voter import VoterModel
+        from repro.topology import ring
+
+        class NoContractVoter(VoterModel):
+            def task_read_agents(self, recipes):
+                return None
+            def task_write_agents(self, recipes):
+                return None
+
+        m = NoContractVoter(ring(100, 4))
+        st0 = m.init_state(jax.random.key(0))
+        cfg = ProtocolConfig(window=64, strict=True)
+        sh, stats = run_engine(m, st0, 150, seed=1, config=cfg,
+                               engine="sharded")
+        sq = run_oracle(m, st0, 150, seed=1, config=cfg)
+        assert bool(jnp.all(sh["opinions"] == sq["opinions"]))
+        assert not stats["halo"]
+        try:
+            make_engine("sharded", m, window=64, halo=True)
+        except ValueError as e:
+            assert "task_read_agents" in str(e)
+        else:
+            raise AssertionError("halo=True should reject contract-less models")
+        print("OK")
+    """)
+    assert "OK" in out
+
+
 def test_sharded_strict_only_guarantee_documented():
     """Under the paper's non-strict record rule the engines may diverge
     from the oracle (missing anti-dependences) — but sharded and
