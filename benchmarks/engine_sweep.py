@@ -2,13 +2,17 @@
 
 For each scenario in {voter, SIS, Axelrod} x window size x device count,
 runs the same task stream through the ``wavefront`` (single-device),
-``sharded`` (halo-exchange shard_map over the agent axis) and
-``sharded_replicated`` (full-state all_gather) engines and reports
-end-to-end throughput (tasks/s, scheduling + execution included), the
-schedule shape, and — for the sharded engines — the per-wave
-communication volume (gathered rows / payload bytes per device vs the
-full state), so BENCH_engine.json captures the halo comm win alongside
-tasks/s.
+``wavefront_overlap`` (cross-window overlapped waves), ``sharded``
+(halo-exchange shard_map over the agent axis), ``sharded_overlap``
+(overlap + pair halo) and ``sharded_replicated`` (full-state all_gather)
+engines and reports end-to-end throughput (tasks/s, scheduling +
+execution included), the schedule shape, for the sharded engines the
+per-wave communication volume (gathered rows / payload bytes per device
+vs the full state), and for the overlapped engines the carry-over
+columns (mean/max overlap depth — tail waves of window k shared with
+head waves of window k+1 — early-task counts and the carry frontier),
+so BENCH_engine.json captures the halo comm win and the barrier-removal
+win alongside tasks/s.
 
 Device counts are realized per subprocess via
 ``--xla_force_host_platform_device_count`` so one invocation sweeps
@@ -56,7 +60,8 @@ def _inner(args) -> None:
         state = model.init_state(jax.random.key(1))
         for window in args.windows:
             total = window * args.windows_per_run
-            for ename in ("wavefront", "sharded", "sharded_replicated"):
+            for ename in ("wavefront", "wavefront_overlap", "sharded",
+                          "sharded_overlap", "sharded_replicated"):
                 if ename.startswith("sharded") and jax.device_count() == 1 \
                         and args.skip_sharded_1dev:
                     continue
@@ -81,6 +86,13 @@ def _inner(args) -> None:
                     "per_wave_comm_bytes": stats.get("per_wave_comm_bytes"),
                     "full_state_bytes": stats.get("full_state_bytes"),
                     "comm_bytes_total": stats.get("comm_bytes_total"),
+                    # carry-over accounting (overlapped engines only)
+                    "overlap": stats.get("overlap"),
+                    "mean_overlap_depth": stats.get("mean_overlap_depth"),
+                    "max_overlap_depth": stats.get("max_overlap_depth"),
+                    "overlap_tasks_early": stats.get("overlap_tasks_early"),
+                    "carry_frontier_mean": stats.get("carry_frontier_mean"),
+                    "carry_frontier_max": stats.get("carry_frontier_max"),
                 })
                 print("ROW " + json.dumps(rows[-1]), flush=True)
 
@@ -105,9 +117,12 @@ def _spawn(device_count: int, argv) -> list[dict]:
         comm = ("" if r.get("per_wave_comm_bytes") is None else
                 f" comm/wave={r['per_wave_comm_bytes']:>8d}B"
                 f" (full={r['full_state_bytes']}B)")
+        ov = ("" if not r.get("overlap") else
+              f" depth={r['mean_overlap_depth']:5.2f}"
+              f" carry={r['carry_frontier_mean']:5.2f}")
         print(f"{r['model']:8s} {r['engine']:18s} W={r['window']:5d} "
               f"d={r['n_devices']} {r['tasks_per_s']:10.0f} tasks/s "
-              f"par={r['mean_parallelism']:6.2f}{comm}")
+              f"par={r['mean_parallelism']:6.2f}{comm}{ov}")
     return rows
 
 

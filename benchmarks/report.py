@@ -144,22 +144,32 @@ def mabs_topology_tables(bench):
 
 def mabs_engine_table(bench):
     meta, rows = bench["meta"], bench["rows"]
-    print(f"\n#### Engine throughput and comm volume "
+    print(f"\n#### Engine throughput, comm volume and window overlap "
           f"(n = {meta.get('n_agents')} agents, backend = "
           f"{meta.get('backend')}"
           f"{', virtual devices' if meta.get('virtual_devices') else ''})\n")
     print("| model | W | devices | engine | tasks/s | mean par "
-          "| comm/wave/device | full state | comm reduction |")
-    print("|---|---|---|---|---|---|---|---|---|")
+          "| comm/wave/device | full state | comm reduction "
+          "| overlap depth | carry frontier |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
     for r in rows:
         comm = r.get("per_wave_comm_bytes")
         full = r.get("full_state_bytes")
         red = (f"{full / comm:.1f}×" if comm and full
                and r.get("halo") else "—")
+        if r.get("overlap"):
+            # mean/max waves of window k shared with window k+1's head,
+            # and the carry-over level floor the cross block imposed
+            depth = (f"{r['mean_overlap_depth']:.2f} "
+                     f"(max {r['max_overlap_depth']})")
+            carry = (f"{r['carry_frontier_mean']:.2f} "
+                     f"(max {r['carry_frontier_max']})")
+        else:
+            depth = carry = "—"
         print(f"| {r['model']} | {r['window']} | {r['n_devices']} "
               f"| {r['engine']} | {r['tasks_per_s']:,.0f} "
               f"| {r['mean_parallelism']:.2f} | {_fmt_kb(comm)} "
-              f"| {_fmt_kb(full)} | {red} |")
+              f"| {_fmt_kb(full)} | {red} | {depth} | {carry} |")
 
 
 def mabs_report(root="."):

@@ -136,6 +136,12 @@ def run_builds(build_ns, *, window: int = 256, seed: int = 0):
             "watts_strogatz": lambda: watts_strogatz(n, 4, 0.1, key),
             "erdos_renyi": lambda: erdos_renyi(n, 4.0 / n, key),
             "barabasi_albert": lambda: barabasi_albert(n, 2, key),
+            # chunked attachment fast path: degrees frozen per block of
+            # 4096 arrivals (after an equally-sized exact warm-up), so
+            # the attachment scan is n/4096 vectorized steps instead of
+            # n sequential ones — the ROADMAP's BA-build bottleneck fix
+            "barabasi_albert_chunked": lambda: barabasi_albert(
+                n, 2, key, chunk=4096),
         }
         for tname, build in builders.items():
             t0 = time.perf_counter()

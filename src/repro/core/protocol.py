@@ -14,9 +14,10 @@ strict hazard rule they are bit-exact vs each other.
 The paper's "choices in applying the protocol" (§3.4) map to:
   chain granularity  -> the model's task definition (e.g. agents per subset)
   task depth         -> what create_tasks precomputes (ids + PRNG binding)
-  workflow params    -> n_workers, C (DES); window size + engine choice
-                        (wavefront/sharded engines; ``halo=...`` and
-                        ``devices=...`` pass through run_engine kwargs)
+  workflow params    -> n_workers, C (DES); window size + engine choice +
+                        cross-window overlap (wavefront/sharded engines;
+                        ``halo=...``, ``overlap=...`` and ``devices=...``
+                        pass through run_engine kwargs)
 """
 from __future__ import annotations
 
@@ -33,6 +34,12 @@ class ProtocolConfig:
     tasks_per_cycle: int = 6   # C  (DES engine; paper keeps C=6)
     strict: bool = True        # full hazard closure vs paper's record rule
     engine: str = "wavefront"  # registry name (repro.engine)
+    #: cross-window overlap knob: True fuses window k+1's independent head
+    #: waves into window k's tail drain (record carry-over, engine docs);
+    #: False forces the conservative window barrier; None (default) keeps
+    #: each engine's own default (the ``*_overlap`` registry entries
+    #: default on, everything else defaults to the barrier fallback).
+    overlap: bool | None = None
 
 
 def run_engine(model, state, total_tasks: int, *, seed: int = 0,
@@ -40,11 +47,26 @@ def run_engine(model, state, total_tasks: int, *, seed: int = 0,
                engine: str | None = None, **engine_kwargs):
     """Run total_tasks through the engine named by ``engine`` (or
     ``config.engine``); extra kwargs go to the engine constructor (e.g.
-    ``devices=...`` for the sharded engine). Returns (state, stats)."""
-    from repro.engine import make_engine
+    ``devices=...`` for the sharded engine, ``overlap=...`` to flip the
+    cross-window overlap knob — default from config). Returns
+    (state, stats)."""
+    import inspect
+
+    from repro.engine import get_engine, make_engine
 
     cfg = config or ProtocolConfig()
-    eng = make_engine(engine or cfg.engine, model, window=cfg.window,
+    name = engine or cfg.engine
+    if cfg.overlap is not None and "overlap" not in engine_kwargs:
+        # inject only into constructors that take the knob: custom
+        # engines registered with the pre-overlap signature keep working
+        # for every cfg.overlap value (False asks for the barrier
+        # behavior such an engine already has)
+        params = inspect.signature(get_engine(name).__init__).parameters
+        if "overlap" in params or any(
+                p.kind is inspect.Parameter.VAR_KEYWORD
+                for p in params.values()):
+            engine_kwargs["overlap"] = cfg.overlap
+    eng = make_engine(name, model, window=cfg.window,
                       strict=cfg.strict, **engine_kwargs)
     return eng.run(state, total_tasks, seed=seed)
 

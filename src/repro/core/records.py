@@ -11,6 +11,14 @@ Row i of C is exactly the record a worker would have accumulated after
 skipping tasks j<i — materialized for all workers/positions at once. The
 matrix is the protocol's O(W²) overhead term; the Pallas kernel in
 kernels/conflict implements the id-matching variant with 128×128 tiling.
+
+The same record algebra extends across the window boundary: the
+rectangular block ``cross_window_conflicts`` is the check a worker's
+record would perform against the *previous* window's undrained tail,
+``carry_frontier`` reduces it to a per-task release level, and
+``wave_levels(base=...)`` schedules the next window under that floor —
+the machinery behind the engines' cross-window overlap (record
+carry-over, docs/engine.md).
 """
 from __future__ import annotations
 
@@ -67,16 +75,71 @@ def window_conflicts(model, recipes, valid: jax.Array, *,
     return prefix_conflicts(model.conflicts, recipes, valid, strict=strict)
 
 
+def cross_window_conflicts(model, recipes_prev, valid_prev,
+                           recipes_next, valid_next, *,
+                           strict: bool = True,
+                           backend: str | None = None) -> jax.Array:
+    """Cross-window conflict block [W_next, W_prev] (bool).
+
+    Row i = task i of the *later* window (k+1), column j = task j of the
+    *earlier* window (k): C[i, j] == 1 iff next-task-i conflicts with
+    prev-task-j. In chain order every prev task precedes every next task,
+    so the block is a full rectangle — no triangular mask, only validity.
+    ``valid_prev`` doubles as the *alive* mask of window k's not-yet-
+    drained tail: columns of already-executed tasks are masked out (they
+    impose no ordering constraint on the next window).
+
+    Footprint models route through the rectangular-tile conflict kernel
+    (Pallas on TPU, fused jnp elsewhere — kernels/conflict/ops.py);
+    predicate-only models fall back to the broadcast pairwise predicate.
+    This is the record carry-over of the overlapped engines: the check a
+    worker's record would perform against tasks of the previous window.
+    """
+    fp_next = model.task_footprint(recipes_next)
+    if fp_next is not None:
+        from repro.kernels.conflict.ops import conflict_block
+
+        reads_n, writes_n = fp_next
+        reads_p, writes_p = model.task_footprint(recipes_prev)
+        return conflict_block(reads_n, writes_n, reads_p, writes_p,
+                              valid_next, valid_prev, strict=strict,
+                              backend=backend)
+    rows = jax.tree_util.tree_map(lambda x: x[:, None], recipes_next)
+    cols = jax.tree_util.tree_map(lambda x: x[None, :], recipes_prev)
+    conf = model.conflicts(rows, cols, strict=strict)
+    return conf & valid_next[:, None] & valid_prev[None, :]
+
+
+def carry_frontier(cross: jax.Array, levels_prev: jax.Array) -> jax.Array:
+    """Per-task level floor imposed by the previous window's tail.
+
+        carry[i] = max{ levels_prev[j] + 1 : cross[i, j] }   (else 0)
+
+    ``levels_prev`` holds the previous window's *remaining* wave levels
+    on the current level clock (-1 = already drained or padded), so a
+    drained task contributes ``-1 + 1 = 0`` — no constraint. The result
+    is the carry-over frontier: feeding it to ``wave_levels(base=...)``
+    pins every next-window task strictly after the tail waves it
+    conflicts with, which is exactly the cross-window record guarantee.
+    """
+    gated = jnp.where(cross, levels_prev[None, :] + 1, 0)
+    return jnp.max(gated, axis=1, initial=0).astype(jnp.int32)
+
+
 def wave_levels(conflicts: jax.Array, valid: jax.Array, *,
+                base: jax.Array | None = None,
                 backend: str | None = None) -> jax.Array:
     """DAG-level (wavefront) assignment.
 
-        level[i] = 1 + max{ level[j] : j < i, C[i, j] }   (else 0)
+        level[i] = max(base[i], 1 + max{ level[j] : j < i, C[i, j] })
 
     This is list scheduling with unbounded workers: tasks in the same level
     commute pairwise *within the window prefix semantics* — a task only
     enters level L if every earlier conflicting task sits at a level < L.
-    Invalid (padded) slots get level -1.
+    ``base`` (optional, non-negative) is the cross-window carry frontier:
+    a per-task release level below which the task may not be scheduled
+    (default: no floor — the classic recurrence, level 0 for tasks with
+    no earlier conflicts). Invalid (padded) slots get level -1.
 
     Sequential-equivalence argument: executing levels in ascending order is
     a topological order of the (strict) dependence DAG restricted to the
@@ -88,7 +151,7 @@ def wave_levels(conflicts: jax.Array, valid: jax.Array, *,
     """
     from repro.kernels.levels.ops import wave_levels as _wave_levels
 
-    return _wave_levels(conflicts, valid, backend=backend)
+    return _wave_levels(conflicts, valid, base=base, backend=backend)
 
 
 def wave_levels_capped(conflicts, valid, n_workers: int):

@@ -88,6 +88,20 @@ def window_halo(read_agents: jax.Array, write_agents: jax.Array) -> jax.Array:
     ).astype(jnp.int32)
 
 
+def pair_halo(halo_prev: jax.Array, halo_next: jax.Array) -> jax.Array:
+    """Halo for an overlapped window pair: the union of both windows'
+    read ∪ write rows, realized by concatenation — [h_prev + h_next]
+    int32, -1 slots preserved. During cross-window overlap a fused wave
+    may execute window k tail tasks *and* window k+1 head tasks, so the
+    per-wave gather must deliver every row either side can touch.
+    Duplicates across the two windows are kept for the same reason
+    ``window_halo`` keeps them: the refresh scatter is idempotent and the
+    static width is what shard_map needs. Like ``window_halo``, computed
+    at schedule time on replicated values — no communication.
+    """
+    return jnp.concatenate([halo_prev, halo_next]).astype(jnp.int32)
+
+
 def halo_gather(local: jax.Array, halo: jax.Array, *, shard_n: int,
                 axis: str = AGENT_AXIS) -> jax.Array:
     """Inside shard_map on the agents mesh: gather global rows ``halo``

@@ -1,15 +1,23 @@
 """Pluggable execution engines for the wavefront protocol.
 
   base.py       — ``Engine`` interface, registry, shared windowed loop
+                  (barrier and cross-window-overlapped variants)
   sequential.py — chain-order oracle (``sequential``)
-  wavefront.py  — single-device vectorized waves (``wavefront``)
+  wavefront.py  — single-device vectorized waves (``wavefront``;
+                  ``wavefront_overlap`` fuses window k+1's head waves
+                  into window k's tail drain)
   sharded.py    — shard_map over the agent axis: halo-exchange comm
                   (``sharded``) with the full-state all_gather layout as
-                  explicit fallback (``sharded_replicated``)
+                  explicit fallback (``sharded_replicated``) and the
+                  pair-halo overlapped mode (``sharded_overlap``)
 
 All engines run the identical task stream and are bit-exact under the
 strict hazard rule; pick by name through ``make_engine`` (or
-``ProtocolConfig.engine`` at the ``repro.core`` API level).
+``ProtocolConfig.engine`` at the ``repro.core`` API level). The
+``overlap`` kwarg flips any windowed engine between the conservative
+window barrier and cross-window overlapped execution; the ``*_overlap``
+registry names are the overlapped defaults the differential harness and
+benchmarks sweep.
 """
 from repro.engine.base import (
     ENGINES,
@@ -20,8 +28,16 @@ from repro.engine.base import (
     register_engine,
 )
 from repro.engine.sequential import SequentialEngine, run_sequential
-from repro.engine.sharded import ShardedEngine, ShardedReplicatedEngine
-from repro.engine.wavefront import WavefrontEngine, WavefrontRunner
+from repro.engine.sharded import (
+    ShardedEngine,
+    ShardedOverlapEngine,
+    ShardedReplicatedEngine,
+)
+from repro.engine.wavefront import (
+    WavefrontEngine,
+    WavefrontOverlapEngine,
+    WavefrontRunner,
+)
 
 __all__ = [
     "ENGINES",
@@ -33,7 +49,9 @@ __all__ = [
     "SequentialEngine",
     "run_sequential",
     "ShardedEngine",
+    "ShardedOverlapEngine",
     "ShardedReplicatedEngine",
     "WavefrontEngine",
+    "WavefrontOverlapEngine",
     "WavefrontRunner",
 ]

@@ -59,10 +59,17 @@ class Engine(abc.ABC):
     #: registry key
     name: str = "engine"
 
-    def __init__(self, model, *, window: int = 256, strict: bool = True):
+    #: default for the cross-window overlap knob (the ``*_overlap``
+    #: registry entries flip it; ``overlap=None`` keeps the class default)
+    default_overlap: bool = False
+
+    def __init__(self, model, *, window: int = 256, strict: bool = True,
+                 overlap: bool | None = None):
         self.model = model
         self.window = int(window)
         self.strict = strict
+        self.overlap = (self.default_overlap if overlap is None
+                        else bool(overlap))
 
     @abc.abstractmethod
     def run(self, state: Any, total_tasks: int, *, seed: int = 0
@@ -86,7 +93,41 @@ class WindowedEngine(Engine):
     sharded engine pads and device_puts the agent axis there). The run
     loop never blocks between windows: the only host sync is the final
     stats reduction after the last window was dispatched.
+
+    **Cross-window overlap** (``overlap=True``, or the ``*_overlap``
+    registry entries): the window boundary stops being a conservative
+    barrier. When window k+1 is scheduled, the loop computes the
+    carry-over conflict frontier between window k's not-yet-drained tail
+    and window k+1's tasks (``records.cross_window_conflicts`` — the
+    rectangular [W_next, W_tail] block through the conflict kernel — and
+    ``records.carry_frontier``), then re-levels window k+1 with that
+    frontier as a per-task floor (``wave_levels(base=carry)``). Execution
+    proceeds in *fused* waves: each wave of window k's drain also runs
+    the window k+1 tasks whose (floored) level matches, so independent
+    head waves of k+1 start while k's tail drains. Tasks sharing a fused
+    wave never conflict — a cross conflict (i, j) forces
+    ``level_next[i] >= level_tail[j] + 1`` — so bit-exactness vs the
+    sequential oracle is preserved (the differential harness pins it).
+    At most two windows are ever in flight: pair step k drains window k
+    completely, so window k+2 only needs the frontier against k+1's
+    remainder. Overlapped subclasses provide
+      * ``_schedule_ov(base_key, start, count)`` — returns
+        ``(recipes, valid, conf, extra)`` (conflict matrix kept for the
+        carry re-leveling; ``extra`` is engine-specific), and
+      * ``_execute_pair(state, cur, lv_cur, nxt, lv_nxt)`` — runs the
+        fused waves that drain ``cur``; returns
+        ``(state, n_waves, lv_nxt_shifted)`` where the shifted levels
+        mark executed tasks -1 and rebase the rest to the new clock.
+    Engines without the pair hooks fall back to the barrier loop.
     """
+
+    #: overlapped-mode hooks; None = barrier-only engine. ``_execute_drain``
+    #: drains a window with no live partner (the run's last window, or a
+    #: single-window run) through the engine's barrier executor — no
+    #: dummy-partner execute_wave calls, no pair-halo gather.
+    _schedule_ov = None
+    _execute_pair = None
+    _execute_drain = None
 
     def _prepare_state(self, state):
         return state
@@ -98,13 +139,23 @@ class WindowedEngine(Engine):
         """The shared scheduling recipe: create one window of tasks and
         reduce it to wave levels (conflict + levels kernels, backend
         auto-detected). Returns (recipes, valid, levels)."""
-        from repro.core.records import wave_levels, window_conflicts
+        from repro.core.records import wave_levels
+
+        recipes, valid, conf = self._schedule_window_ov(
+            base_key, start, count)
+        return recipes, valid, wave_levels(conf, valid)
+
+    def _schedule_window_ov(self, base_key, start, count):
+        """Overlap-mode scheduling recipe: like ``_schedule_window`` but
+        the conflict matrix is kept (the boundary step re-levels against
+        the carry frontier). Returns (recipes, valid, conf)."""
+        from repro.core.records import window_conflicts
 
         recipes = self.model.create_tasks(base_key, start, self.window)
         valid = jnp.arange(self.window) < count
         conf = window_conflicts(self.model, recipes, valid,
                                 strict=self.strict)
-        return recipes, valid, wave_levels(conf, valid)
+        return recipes, valid, conf
 
     def _schedule(self, base_key, start, count):  # pragma: no cover - abstract
         raise NotImplementedError
@@ -112,7 +163,115 @@ class WindowedEngine(Engine):
     def _execute(self, state, sched):  # pragma: no cover - abstract
         raise NotImplementedError
 
+    # ------------------------------------------------- cross-window overlap
+    def _make_boundary(self):
+        """Jitted boundary step for one window transition k -> k+1:
+        cross-window record check, carry frontier, floored re-leveling,
+        and the per-boundary overlap statistics."""
+        from repro.core.records import (
+            carry_frontier,
+            cross_window_conflicts,
+            wave_levels,
+        )
+
+        model, strict, w = self.model, self.strict, self.window
+
+        def boundary(rec_a, lv_a, rec_b, valid_b, conf_b):
+            alive_a = lv_a >= 0          # window k's not-yet-drained tail
+            cross = cross_window_conflicts(model, rec_a, alive_a,
+                                           rec_b, valid_b, strict=strict)
+            carry = carry_frontier(cross, lv_a)
+            lv_b = wave_levels(conf_b, valid_b, base=carry)
+            n_waves_a = jnp.max(lv_a) + 1
+            # overlap depth: tail waves of k during which k+1 tasks run
+            early = valid_b & (lv_b < n_waves_a)
+            occ = jnp.zeros((w,), bool).at[
+                jnp.where(early, lv_b, w)].set(True, mode="drop")
+            n_valid = jnp.maximum(jnp.sum(valid_b), 1)
+            bstats = (jnp.sum(occ),                              # depth
+                      jnp.sum(early),                            # early tasks
+                      jnp.sum(jnp.where(valid_b, carry, 0)) / n_valid,
+                      jnp.max(jnp.where(valid_b, carry, 0), initial=0))
+            return lv_b, bstats
+
+        return jax.jit(boundary)
+
+    def _levels0(self, conf, valid):
+        """First window's levels (no predecessor -> no carry floor)."""
+        if getattr(self, "_levels0_fn", None) is None:
+            from repro.core.records import wave_levels
+
+            self._levels0_fn = jax.jit(
+                lambda c, v: wave_levels(c, v))
+        return self._levels0_fn(conf, valid)
+
+    def _run_overlapped(self, state: Any, total_tasks: int, *, seed: int = 0):
+        base_key = jax.random.key(seed)
+        state = self._prepare_state(state)
+        if getattr(self, "_boundary_fn", None) is None:
+            self._boundary_fn = self._make_boundary()
+        t = 0
+        n_windows = 0
+        wave_counts = []
+        bstats = []
+        cur = self._schedule_ov(base_key, 0, min(self.window, total_tasks))
+        lv = self._levels0(cur[2], cur[1])
+        while t < total_tasks:
+            k = min(self.window, total_tasks - t)
+            if t + k < total_tasks:
+                # dispatch window k+1's schedule + boundary (cross block,
+                # carry frontier, floored levels) before blocking on the
+                # fused drain of window k — same double buffering as the
+                # barrier loop, now with the carry-over record check
+                nxt = self._schedule_ov(
+                    base_key, t + k, min(self.window, total_tasks - t - k))
+                lv_nxt, b = self._boundary_fn(cur[0], lv,
+                                              nxt[0], nxt[1], nxt[2])
+                bstats.append(b)
+                state, n_waves, lv_nxt = self._execute_pair(
+                    state, cur, lv, nxt, lv_nxt)
+                cur, lv = nxt, lv_nxt
+            else:
+                # last window: no partner — drain through the barrier
+                # executor (skips the empty-mask partner waves and, for
+                # the sharded engine, the doubled pair-halo gather)
+                state, n_waves = self._execute_drain(state, cur, lv)
+            wave_counts.append(n_waves)
+            n_windows += 1
+            t += k
+        total_waves = int(sum(int(w) for w in wave_counts))  # host sync here
+        state = self._finalize_state(state)
+        depths = [int(b[0]) for b in bstats]
+        earlies = [int(b[1]) for b in bstats]
+        cmeans = [float(b[2]) for b in bstats]
+        cmaxs = [int(b[3]) for b in bstats]
+        stats = {
+            "total_tasks": total_tasks,
+            "n_windows": n_windows,
+            "total_waves": total_waves,
+            "mean_parallelism": total_tasks / max(total_waves, 1),
+            "overlap": True,
+            "n_boundaries": len(bstats),
+            "mean_overlap_depth": (sum(depths) / len(depths)
+                                   if depths else 0.0),
+            "max_overlap_depth": max(depths, default=0),
+            "overlap_tasks_early": sum(earlies),
+            "carry_frontier_mean": (sum(cmeans) / len(cmeans)
+                                    if cmeans else 0.0),
+            "carry_frontier_max": max(cmaxs, default=0),
+        }
+        return state, self._extend_stats(stats)
+
     def run(self, state: Any, total_tasks: int, *, seed: int = 0):
+        if self.overlap:
+            # NB: only the schedule hook is checked here — engines may
+            # defer building the pair executor until the state shape is
+            # known (_prepare_state), as the sharded engine does
+            if self._schedule_ov is None:
+                raise ValueError(
+                    f"engine {self.name!r} does not implement cross-window "
+                    "overlap; use overlap=False (the barrier fallback)")
+            return self._run_overlapped(state, total_tasks, seed=seed)
         base_key = jax.random.key(seed)
         state = self._prepare_state(state)
         t = 0
@@ -138,6 +297,7 @@ class WindowedEngine(Engine):
             "n_windows": n_windows,
             "total_waves": total_waves,
             "mean_parallelism": total_tasks / max(total_waves, 1),
+            "overlap": False,
         }
         return state, self._extend_stats(stats)
 

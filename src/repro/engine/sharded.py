@@ -33,11 +33,23 @@ agent state and execute on that. Models that do not declare the
 read/write row contracts route here automatically, as does any run whose
 halo would not beat the full state (halo width >= N).
 
+**Cross-window overlap** (``overlap=True`` / ``sharded_overlap``): the
+window boundary stops draining at a barrier — window k+1's head waves
+execute fused with window k's tail (see ``WindowedEngine``). Per fused
+wave the gather must deliver every row *either* window can touch, so the
+schedule carries the pair halo: the union of both windows' read ∪ write
+rows (``distributed.sharding.pair_halo``, static width 2·W·(nr+nw)); the
+halo-vs-full-state decision and the comm accounting use that doubled
+width. Each fused wave gathers once, executes window k's owned tasks at
+that level, then window k+1's on the same scratch — legal because the
+carry frontier guarantees a fused wave never holds conflicting tasks,
+so neither window's reads overlap the other's same-wave writes.
+
 Window-local objects (recipes, validity, conflict matrix, wave levels)
 are O(W)/O(W²) and stay replicated in both modes; scheduling runs once
-and its outputs broadcast to the mesh. Both modes are bit-exact vs the
+and its outputs broadcast to the mesh. All modes are bit-exact vs the
 sequential oracle under the strict rule (property-tested under 8 virtual
-devices), and both report their per-wave comm volume in ``run`` stats
+devices), and report their per-wave comm volume in ``run`` stats
 (``per_wave_comm_bytes`` vs ``full_state_bytes``).
 
 The ``WindowedEngine`` loop double-buffers windows: window t+1's schedule
@@ -57,6 +69,7 @@ from repro.distributed.sharding import (
     agents_mesh,
     halo_gather,
     halo_scatter,
+    pair_halo,
     window_halo,
 )
 from repro.engine.base import WindowedEngine, register_engine
@@ -72,8 +85,10 @@ class ShardedEngine(WindowedEngine):
     halo: bool | None = None
 
     def __init__(self, model, *, window: int = 256, strict: bool = True,
-                 devices=None, jit: bool = True, halo: bool | None = None):
-        super().__init__(model, window=window, strict=strict)
+                 devices=None, jit: bool = True, halo: bool | None = None,
+                 overlap: bool | None = None):
+        super().__init__(model, window=window, strict=strict,
+                         overlap=overlap)
         self.mesh = agents_mesh(devices)
         self.n_devices = self.mesh.devices.size
         self._jit = jit
@@ -106,6 +121,16 @@ class ShardedEngine(WindowedEngine):
 
         self._schedule = jax.jit(_schedule) if jit else _schedule
 
+        def _schedule_ov(base_key, start, count):
+            recipes, valid, conf = self._schedule_window_ov(
+                base_key, start, count)
+            writes = model.task_write_agents(recipes)
+            halo_idx = (window_halo(model.task_read_agents(recipes), writes)
+                        if self.halo else None)
+            return recipes, valid, conf, (writes, halo_idx)
+
+        self._schedule_ov = jax.jit(_schedule_ov) if jit else _schedule_ov
+
     # ------------------------------------------------------------ build
     def _build(self, n_agents: int):
         """Compile the sharded window executor for one agent count."""
@@ -115,12 +140,47 @@ class ShardedEngine(WindowedEngine):
         n_pad = -(-n_agents // d) * d
         shard_n = n_pad // d
         halo_width = self.window * self._halo_slots
-        # degenerate halo (>= full state): replication ships fewer bytes
+        # degenerate halo (>= full state): replication ships fewer bytes.
+        # The barrier/drain executor decides on the single-window width;
+        # fused waves gather the union of both windows' halos, so the
+        # pair executor decides on the doubled width independently (a
+        # window size whose single halo wins can lose once doubled).
         use_halo = self.halo and halo_width < n_agents
+        use_halo_pair = self.halo and 2 * halo_width < n_agents
 
         def _pad(x):
             return jnp.pad(x, [(0, n_pad - n_agents)]
                            + [(0, 0)] * (x.ndim - 1))
+
+        def read_view(loc, halo, local_rows, use):
+            """Every row the wave's owned tasks may read, fresh."""
+            if not use:
+                return jax.tree_util.tree_map(
+                    lambda x: jax.lax.all_gather(
+                        x, AXIS, axis=0, tiled=True)[:n_agents], loc)
+
+            def one(x):
+                g = halo_gather(x, halo, shard_n=shard_n)
+                scratch = jnp.zeros((n_agents,) + x.shape[1:], x.dtype)
+                scratch = halo_scatter(scratch, halo, g)
+                # local block is authoritative — refresh it so the
+                # end-of-wave slice keeps unwritten rows exact
+                return scratch.at[local_rows].set(x, mode="drop")
+            return jax.tree_util.tree_map(one, loc)
+
+        def owned_mask(levels, write_agents, w, lo):
+            mask = levels == w
+            if write_agents is not None:
+                owned = jnp.any(
+                    (write_agents >= lo) & (write_agents < lo + shard_n),
+                    axis=-1)
+                mask = mask & owned
+            return mask
+
+        def keep_local(new, lo):
+            return jax.tree_util.tree_map(
+                lambda x: jax.lax.dynamic_slice_in_dim(
+                    _pad(x), lo, shard_n, axis=0), new)
 
         def window_local(local_state, recipes, levels, write_agents, halo):
             # runs per-device inside shard_map; local leaves are [N/d, ...]
@@ -128,36 +188,37 @@ class ShardedEngine(WindowedEngine):
             local_rows = lo + jnp.arange(shard_n)
             n_waves = jnp.max(levels) + 1
 
-            def read_view(loc):
-                """Every row the wave's owned tasks may read, fresh."""
-                if not use_halo:
-                    return jax.tree_util.tree_map(
-                        lambda x: jax.lax.all_gather(
-                            x, AXIS, axis=0, tiled=True)[:n_agents], loc)
+            def body(carry):
+                w, loc = carry
+                full = read_view(loc, halo, local_rows, use_halo)
+                new = model.execute_wave(
+                    full, recipes, owned_mask(levels, write_agents, w, lo))
+                return w + 1, keep_local(new, lo)
 
-                def one(x):
-                    g = halo_gather(x, halo, shard_n=shard_n)
-                    scratch = jnp.zeros((n_agents,) + x.shape[1:], x.dtype)
-                    scratch = halo_scatter(scratch, halo, g)
-                    # local block is authoritative — refresh it so the
-                    # end-of-wave slice keeps unwritten rows exact
-                    return scratch.at[local_rows].set(x, mode="drop")
-                return jax.tree_util.tree_map(one, loc)
+            _, local_state = jax.lax.while_loop(
+                lambda c: c[0] < n_waves, body,
+                (jnp.int32(0), local_state))
+            return local_state, n_waves
+
+        def window_pair_local(local_state, rec_a, lv_a, wa_a,
+                              rec_b, lv_b, wa_b, halo):
+            # fused drain of window k (a) overlapped with window k+1 (b);
+            # halo is the pair union, so one gather serves both windows
+            lo = jax.lax.axis_index(AXIS) * shard_n
+            local_rows = lo + jnp.arange(shard_n)
+            n_waves = jnp.max(lv_a) + 1
 
             def body(carry):
                 w, loc = carry
-                full = read_view(loc)
-                mask = levels == w
-                if write_agents is not None:
-                    owned = jnp.any(
-                        (write_agents >= lo) & (write_agents < lo + shard_n),
-                        axis=-1)
-                    mask = mask & owned
-                new = model.execute_wave(full, recipes, mask)
-                loc = jax.tree_util.tree_map(
-                    lambda x: jax.lax.dynamic_slice_in_dim(
-                        _pad(x), lo, shard_n, axis=0), new)
-                return w + 1, loc
+                full = read_view(loc, halo, local_rows, use_halo_pair)
+                new = model.execute_wave(
+                    full, rec_a, owned_mask(lv_a, wa_a, w, lo))
+                # b's reads never overlap a's same-wave writes (the carry
+                # frontier forbids conflicts inside a fused wave), so
+                # executing b on a's output scratch is exact
+                new = model.execute_wave(
+                    new, rec_b, owned_mask(lv_b, wa_b, w, lo))
+                return w + 1, keep_local(new, lo)
 
             _, local_state = jax.lax.while_loop(
                 lambda c: c[0] < n_waves, body,
@@ -170,17 +231,48 @@ class ShardedEngine(WindowedEngine):
             out_specs=(P(AXIS), P()),
             check_vma=False)
 
+        window_pair_sharded = shard_map(
+            window_pair_local, mesh=self.mesh,
+            in_specs=(P(AXIS), P(), P(), P(), P(), P(), P(), P()),
+            out_specs=(P(AXIS), P()),
+            check_vma=False)
+
         def _execute(state, sched):
             recipes, levels, write_agents, halo = sched
             if halo is None:   # replicated mode schedules carry no halo
                 halo = jnp.full((1,), -1, jnp.int32)
             return window_sharded(state, recipes, levels, write_agents, halo)
 
+        def _execute_pair(state, cur, lv_a, nxt, lv_b):
+            rec_a, _, _, (wa_a, halo_a) = cur
+            rec_b, _, _, (wa_b, halo_b) = nxt
+            halo = (pair_halo(halo_a, halo_b) if halo_a is not None
+                    else jnp.full((1,), -1, jnp.int32))
+            state, n_waves = window_pair_sharded(
+                state, rec_a, lv_a, wa_a, rec_b, lv_b, wa_b, halo)
+            # rebase the next window onto the new level clock; executed
+            # (and invalid) tasks drop to -1
+            lv_b = jnp.where(lv_b >= n_waves, lv_b - n_waves, -1)
+            return state, n_waves, lv_b
+
         self._execute = (jax.jit(_execute, donate_argnums=(0,))
                          if self._jit else _execute)
+        self._execute_pair = (jax.jit(_execute_pair, donate_argnums=(0,))
+                              if self._jit else _execute_pair)
+        # partnerless drain (last / only window): route through the
+        # barrier executor — single-window halo width, no fused waves
+        self._execute_drain = lambda state, cur, lv: self._execute(
+            state, (cur[0], lv, cur[3][0], cur[3][1]))
         self._n_agents, self._n_pad = n_agents, n_pad
-        self._halo_active = bool(use_halo)
-        self._gather_rows = halo_width if use_halo else n_pad
+        # stats report the mode that dominates the run: fused pair waves
+        # for overlapped runs (the final drain ships the single-window
+        # halo, slightly less than reported), plain windows otherwise
+        if self.overlap:
+            self._halo_active = bool(use_halo_pair)
+            self._gather_rows = 2 * halo_width if use_halo_pair else n_pad
+        else:
+            self._halo_active = bool(use_halo)
+            self._gather_rows = halo_width if use_halo else n_pad
         self._built_for = n_agents
 
     # ------------------------------------------------------- state hooks
@@ -211,7 +303,8 @@ class ShardedEngine(WindowedEngine):
         stats["halo"] = self._halo_active
         # rows delivered to each device per wave (halo list vs full state)
         # and the matching payload bytes; comm_bytes_total accumulates the
-        # per-device receive volume over every executed wave.
+        # per-device receive volume over every executed wave. Overlapped
+        # runs gather the pair halo (2·W·slots rows) per fused wave.
         stats["per_wave_gather_rows"] = int(self._gather_rows)
         stats["per_wave_comm_bytes"] = int(self._comm_bytes)
         stats["full_state_bytes"] = int(self._full_bytes)
@@ -227,3 +320,13 @@ class ShardedReplicatedEngine(ShardedEngine):
 
     name = "sharded_replicated"
     halo = False
+
+
+@register_engine
+class ShardedOverlapEngine(ShardedEngine):
+    """``sharded`` with cross-window overlap on by default: fused tail/
+    head waves with the pair-halo gather. The plain ``sharded`` engine
+    stays the registered barrier fallback."""
+
+    name = "sharded_overlap"
+    default_overlap = True

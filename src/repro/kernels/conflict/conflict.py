@@ -51,6 +51,39 @@ from jax.experimental.pallas import tpu as pltpu
 BLOCK = 128
 
 
+def _hazard_tile(nr_i: int, nw_i: int, nr_j: int, nw_j: int, strict: bool,
+                 reads_i, writes_i, reads_j, writes_j, bi, bj):
+    """Shared hazard algebra for one [Bi, Bj] tile (rows = later task i,
+    cols = earlier task j): flow W_j ∩ R_i, plus output W_j ∩ W_i and
+    anti W_i ∩ R_j under the strict closure. Pure VPU integer compares;
+    used by both the triangular prefix kernel and the rectangular
+    cross-window block kernel."""
+    conf = jnp.zeros((bi, bj), dtype=jnp.bool_)
+
+    # flow (RAW): write_j ∈ reads_i
+    for a in range(nw_j):
+        wj = writes_j[:, a][None, :]          # [1, Bj] earlier-task writes
+        uj = wj >= 0
+        for c in range(nr_i):
+            ri = reads_i[:, c][:, None]       # [Bi, 1]
+            conf |= (ri == wj) & uj & (ri >= 0)
+        if strict:
+            # output (WAW): write_j ∈ writes_i
+            for c in range(nw_i):
+                wi = writes_i[:, c][:, None]
+                conf |= (wi == wj) & uj & (wi >= 0)
+
+    if strict:
+        # anti (WAR): write_i ∈ reads_j
+        for a in range(nw_i):
+            wi = writes_i[:, a][:, None]      # [Bi, 1]
+            ui = wi >= 0
+            for c in range(nr_j):
+                rj = reads_j[:, c][None, :]   # [1, Bj]
+                conf |= (wi == rj) & ui & (rj >= 0)
+    return conf
+
+
 def _kernel(nr: int, nw: int, strict: bool, w_total: int,
             bi_ref, bj_ref,
             reads_i, writes_i, reads_j, writes_j, valid_i, valid_j, out_ref):
@@ -62,29 +95,8 @@ def _kernel(nr: int, nw: int, strict: bool, w_total: int,
     gi = bi * b + jax.lax.broadcasted_iota(jnp.int32, (b, b), 0)  # global i
     gj = bj * b + jax.lax.broadcasted_iota(jnp.int32, (b, b), 1)  # global j
 
-    conf = jnp.zeros((b, b), dtype=jnp.bool_)
-
-    # flow (RAW): write_j ∈ reads_i
-    for a in range(nw):
-        wj = writes_j[:, a][None, :]          # [1, B] earlier-task writes
-        uj = wj >= 0
-        for c in range(nr):
-            ri = reads_i[:, c][:, None]       # [B, 1]
-            conf |= (ri == wj) & uj & (ri >= 0)
-        if strict:
-            # output (WAW): write_j ∈ writes_i
-            for c in range(nw):
-                wi = writes_i[:, c][:, None]
-                conf |= (wi == wj) & uj & (wi >= 0)
-
-    if strict:
-        # anti (WAR): write_i ∈ reads_j
-        for a in range(nw):
-            wi = writes_i[:, a][:, None]      # [B, 1]
-            ui = wi >= 0
-            for c in range(nr):
-                rj = reads_j[:, c][None, :]   # [1, B]
-                conf |= (wi == rj) & ui & (rj >= 0)
+    conf = _hazard_tile(nr, nw, nr, nw, strict,
+                        reads_i, writes_i, reads_j, writes_j, b, b)
 
     mask = (gj < gi) & (gi < w_total) & (gj < w_total)
     mask &= (valid_i[:, :1] != 0) & (valid_j[:, :1].T != 0)
@@ -145,3 +157,77 @@ def conflict_matrix_pallas(read_ids, write_ids, valid, *, strict: bool = True,
     # zero the never-visited tiles strictly above the block diagonal
     lower = jnp.tril(jnp.ones((w_pad, w_pad), dtype=bool), k=-1)
     return jnp.where(lower, out, 0)[:w, :w]
+
+
+def _block_kernel(nr_i: int, nw_i: int, nr_j: int, nw_j: int, strict: bool,
+                  wi_total: int, wj_total: int,
+                  reads_i, writes_i, reads_j, writes_j,
+                  valid_i, valid_j, out_ref):
+    bi, bj = out_ref.shape
+
+    gi = (pl.program_id(0) * bi
+          + jax.lax.broadcasted_iota(jnp.int32, (bi, bj), 0))
+    gj = (pl.program_id(1) * bj
+          + jax.lax.broadcasted_iota(jnp.int32, (bi, bj), 1))
+
+    conf = _hazard_tile(nr_i, nw_i, nr_j, nw_j, strict,
+                        reads_i, writes_i, reads_j, writes_j, bi, bj)
+
+    # full rectangle: every j-side task precedes every i-side task, so
+    # there is no triangular/prefix mask — only padding and validity
+    mask = (gi < wi_total) & (gj < wj_total)
+    mask &= (valid_i[:, :1] != 0) & (valid_j[:, :1].T != 0)
+    out_ref[...] = (conf & mask).astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("strict", "interpret", "block"))
+def conflict_block_pallas(reads_i, writes_i, reads_j, writes_j,
+                          valid_i, valid_j, *, strict: bool = True,
+                          interpret: bool | None = None, block: int = BLOCK):
+    """Rectangular cross-window conflict block [Wi, Wj] int32.
+
+    Rows are the *later* window's tasks (reads_i [Wi, nr_i] / writes_i
+    [Wi, nw_i]), columns the *earlier* window's (reads_j [Wj, nr_j] /
+    writes_j [Wj, nw_j]); -1 ids are unused slots, valid_* mask padded
+    window entries. Because the two sides come from different windows,
+    every column task precedes every row task in chain order, so — unlike
+    the triangular prefix kernel — the tile grid is the full [Wi/B, Wj/B]
+    rectangle and no prefix mask applies. This is the overlapped engines'
+    carry-over record check (core/records.cross_window_conflicts).
+    """
+    if interpret is None:
+        from repro.kernels import interpret_default
+
+        interpret = interpret_default()
+    wi, nr_i = reads_i.shape
+    wj, nr_j = reads_j.shape
+    nw_i, nw_j = writes_i.shape[1], writes_j.shape[1]
+    b_i, b_j = min(block, wi), min(block, wj)
+    wi_pad, wj_pad = -(-wi // b_i) * b_i, -(-wj // b_j) * b_j
+
+    def _pad(x, w_pad):
+        w = x.shape[0]
+        return (x if w_pad == w else
+                jnp.pad(x, ((0, w_pad - w), (0, 0)), constant_values=-1))
+
+    reads_i, writes_i = _pad(reads_i, wi_pad), _pad(writes_i, wi_pad)
+    reads_j, writes_j = _pad(reads_j, wj_pad), _pad(writes_j, wj_pad)
+    vi = jnp.pad(valid_i.astype(jnp.int32), (0, wi_pad - wi))[:, None]
+    vj = jnp.pad(valid_j.astype(jnp.int32), (0, wj_pad - wj))[:, None]
+
+    out = pl.pallas_call(
+        functools.partial(_block_kernel, nr_i, nw_i, nr_j, nw_j,
+                          strict, wi, wj),
+        grid=(wi_pad // b_i, wj_pad // b_j),
+        in_specs=[pl.BlockSpec((b_i, nr_i), lambda i, j: (i, 0)),
+                  pl.BlockSpec((b_i, nw_i), lambda i, j: (i, 0)),
+                  pl.BlockSpec((b_j, nr_j), lambda i, j: (j, 0)),
+                  pl.BlockSpec((b_j, nw_j), lambda i, j: (j, 0)),
+                  pl.BlockSpec((b_i, 1), lambda i, j: (i, 0)),
+                  pl.BlockSpec((b_j, 1), lambda i, j: (j, 0))],
+        out_specs=pl.BlockSpec((b_i, b_j), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((wi_pad, wj_pad), jnp.int32),
+        interpret=interpret,
+    )(reads_i, writes_i, reads_j, writes_j, vi, vj)
+    return out[:wi, :wj]

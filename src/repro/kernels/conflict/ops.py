@@ -15,7 +15,10 @@ import jax.numpy as jnp
 
 from repro.core.model import footprint_conflicts
 from repro.kernels import ON_TPU
-from repro.kernels.conflict.conflict import conflict_matrix_pallas
+from repro.kernels.conflict.conflict import (
+    conflict_block_pallas,
+    conflict_matrix_pallas,
+)
 
 
 @functools.partial(jax.jit, static_argnames=("strict",))
@@ -55,5 +58,53 @@ def conflict_matrix(read_ids, write_ids, valid, *, strict: bool = True,
     if backend == "pallas":
         out = conflict_matrix_pallas(read_ids, write_ids, valid,
                                      strict=strict, interpret=interpret)
+        return out.astype(bool)
+    raise ValueError(f"unknown conflict backend {backend!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("strict",))
+def conflict_block_jnp(reads_i, writes_i, reads_j, writes_j,
+                       valid_i, valid_j, *, strict: bool = True):
+    """Vectorized fallback for the rectangular cross block: the shared
+    hazard algebra broadcast over all (later i, earlier j) pairs, masked
+    by validity only — no triangular mask, every j precedes every i."""
+    conf = footprint_conflicts(
+        (reads_i[:, None], writes_i[:, None]),
+        (reads_j[None, :], writes_j[None, :]),
+        strict=strict,
+    )
+    return conf & valid_i[:, None] & valid_j[None, :]
+
+
+def conflict_block(reads_i, writes_i, reads_j, writes_j, valid_i, valid_j,
+                   *, strict: bool = True, backend: str | None = None,
+                   interpret: bool | None = None):
+    """Cross-window conflict block [Wi, Wj] (bool) from id footprints.
+
+    Rows are the *later* window's tasks, columns the *earlier* window's;
+    negative ids are unused slots; valid_i/valid_j mask padded entries.
+    This is the overlapped engines' carry-over record check — the
+    [W_next, W_tail] block between window k+1's head tasks and window
+    k's not-yet-drained tail (core/records.cross_window_conflicts).
+
+    backend: None  — auto: Pallas (compiled) on TPU, jnp elsewhere;
+             "pallas" — force the rectangular-tile kernel;
+             "jnp"    — force the vectorized fallback.
+    """
+    reads_i = jnp.asarray(reads_i, jnp.int32)
+    writes_i = jnp.asarray(writes_i, jnp.int32)
+    reads_j = jnp.asarray(reads_j, jnp.int32)
+    writes_j = jnp.asarray(writes_j, jnp.int32)
+    valid_i = jnp.asarray(valid_i, bool)
+    valid_j = jnp.asarray(valid_j, bool)
+    if backend is None:
+        backend = "pallas" if ON_TPU else "jnp"
+    if backend == "jnp":
+        return conflict_block_jnp(reads_i, writes_i, reads_j, writes_j,
+                                  valid_i, valid_j, strict=strict)
+    if backend == "pallas":
+        out = conflict_block_pallas(reads_i, writes_i, reads_j, writes_j,
+                                    valid_i, valid_j, strict=strict,
+                                    interpret=interpret)
         return out.astype(bool)
     raise ValueError(f"unknown conflict backend {backend!r}")

@@ -33,3 +33,16 @@ def conflict_matrix_ref(read_ids, write_ids, valid, *, strict: bool = True):
         conf = conf | waw | war
     lower = jnp.tril(jnp.ones((w, w), dtype=bool), k=-1)
     return conf & lower & valid[:, None] & valid[None, :]
+
+
+def conflict_block_ref(reads_i, writes_i, reads_j, writes_j,
+                       valid_i, valid_j, *, strict: bool = True):
+    """[Wi, Wj] bool cross-window conflict block: rows are the later
+    window's tasks, columns the earlier window's. Same hazard algebra as
+    the prefix matrix but no triangular mask — every column task precedes
+    every row task in chain order."""
+    conf = _any_match(reads_i, writes_j)        # W_j ∩ R_i
+    if strict:
+        conf = conf | _any_match(writes_i, writes_j)   # W_j ∩ W_i
+        conf = conf | _any_match(writes_i, reads_j)    # W_i ∩ R_j
+    return conf & valid_i[:, None] & valid_j[None, :]

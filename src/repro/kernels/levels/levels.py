@@ -36,7 +36,7 @@ from jax.experimental import pallas as pl
 BLOCK = 128
 
 
-def _kernel(conf_ref, valid_ref, out_ref):
+def _kernel(conf_ref, valid_ref, base_ref, out_ref):
     bi = pl.program_id(0)
     b = conf_ref.shape[0]      # block rows
     wp = conf_ref.shape[1]     # padded window
@@ -57,12 +57,14 @@ def _kernel(conf_ref, valid_ref, out_ref):
     ri = jax.lax.broadcasted_iota(jnp.int32, (b, 1), 0)          # [B, 1]
     ci = jax.lax.broadcasted_iota(jnp.int32, (1, b), 1)          # [1, B]
     vrow = valid_ref[...] != 0                                   # [B, 1]
+    floor = base_ref[...]                                        # [B, 1]
 
     def body(r, cur):
         # cur [1, B]: levels of the block's tasks resolved so far (-1 unset)
         m_in = jnp.max(jnp.where((rows == r) & blk, cur, -1))
         m_pre = jnp.max(jnp.where(ri == r, dep0, -1))
-        lvl = jnp.maximum(m_in, m_pre) + 1
+        base_r = jnp.max(jnp.where(ri == r, floor, 0))
+        lvl = jnp.maximum(jnp.maximum(m_in, m_pre) + 1, base_r)
         valid_r = jnp.max(jnp.where((ri == r) & vrow, 1, 0)) > 0
         lvl = jnp.where(valid_r, lvl, -1)
         return jnp.where(ci == r, lvl, cur)
@@ -73,9 +75,13 @@ def _kernel(conf_ref, valid_ref, out_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "block"))
-def wave_levels_pallas(conflicts, valid, *, interpret: bool | None = None,
-                       block: int = BLOCK):
+def wave_levels_pallas(conflicts, valid, base=None, *,
+                       interpret: bool | None = None, block: int = BLOCK):
     """conflicts [W, W] bool/int, valid [W] bool -> [W] int32 levels.
+
+    ``base`` (optional [W] int32, non-negative) is the per-task level
+    floor — the overlapped engines' cross-window carry frontier; None
+    means no floor (all-zero), the classic recurrence.
 
     interpret=None auto-detects the backend: compiled on TPU, Pallas
     interpreter elsewhere. Any window size is accepted; non-multiples of
@@ -89,19 +95,25 @@ def wave_levels_pallas(conflicts, valid, *, interpret: bool | None = None,
     b = min(block, w)
     wp = -(-w // b) * b  # next multiple of the tile size
     conf = conflicts.astype(jnp.int32)
+    if base is None:
+        base = jnp.zeros((w,), dtype=jnp.int32)
+    base = base.astype(jnp.int32)
     if wp != w:
         conf = jnp.pad(conf, ((0, wp - w), (0, wp - w)))
         valid = jnp.pad(valid.astype(bool), (0, wp - w),
                         constant_values=False)
+        base = jnp.pad(base, (0, wp - w))
     valid_i32 = valid.astype(jnp.int32)[:, None]  # [W, 1] for clean tiling
+    base_i32 = base[:, None]                      # [W, 1] for clean tiling
 
     out = pl.pallas_call(
         _kernel,
         grid=(wp // b,),
         in_specs=[pl.BlockSpec((b, wp), lambda i: (i, 0)),
+                  pl.BlockSpec((b, 1), lambda i: (i, 0)),
                   pl.BlockSpec((b, 1), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((wp, 1), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((wp, 1), jnp.int32),
         interpret=interpret,
-    )(conf, valid_i32)
+    )(conf, valid_i32, base_i32)
     return out[:w, 0]

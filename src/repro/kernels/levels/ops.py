@@ -16,15 +16,20 @@ from repro.kernels.levels.levels import wave_levels_pallas
 from repro.kernels.levels.ref import wave_levels_ref
 
 
-def wave_levels(conflicts, valid, *, backend: str | None = None,
+def wave_levels(conflicts, valid, *, base=None, backend: str | None = None,
                 interpret: bool | None = None):
     """Wavefront levels [W] int32 from a prefix-conflict matrix.
 
-        level[i] = 1 + max{ level[j] : j < i, C[i, j] }   (else 0)
+        level[i] = max(base[i], 1 + max{ level[j] : j < i, C[i, j] })
 
-    Invalid (padded) slots get level -1. Executing levels in ascending
-    order is a topological order of the strict dependence DAG restricted
-    to the window (paper §3.2).
+    ``base`` (optional [W] int32, non-negative) is a per-task level
+    floor — the overlapped engines pass the cross-window carry frontier
+    (core/records.carry_frontier) so window k+1's tasks cannot start
+    before the window-k tail waves they conflict with have drained; None
+    (the default) means no floor, the classic recurrence (level 0 for
+    tasks with no earlier conflicts). Invalid (padded) slots get level
+    -1. Executing levels in ascending order is a topological order of
+    the strict dependence DAG restricted to the window (paper §3.2).
 
     backend: None  — auto: Pallas (compiled) on TPU, the scan elsewhere;
              "pallas" — force the blocked kernel (interpret per
@@ -33,10 +38,13 @@ def wave_levels(conflicts, valid, *, backend: str | None = None,
     """
     conflicts = jnp.asarray(conflicts)
     valid = jnp.asarray(valid, bool)
+    if base is not None:
+        base = jnp.asarray(base, jnp.int32)
     if backend is None:
         backend = "pallas" if ON_TPU else "jnp"
     if backend == "jnp":
-        return wave_levels_ref(conflicts, valid)
+        return wave_levels_ref(conflicts, valid, base)
     if backend == "pallas":
-        return wave_levels_pallas(conflicts, valid, interpret=interpret)
+        return wave_levels_pallas(conflicts, valid, base,
+                                  interpret=interpret)
     raise ValueError(f"unknown levels backend {backend!r}")

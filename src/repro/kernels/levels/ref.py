@@ -1,6 +1,12 @@
 """Pure-jnp oracle for wave-level assignment: the per-task ``lax.scan``.
 
-    level[i] = 1 + max{ level[j] : C[i, j] }   (else 0),  invalid -> -1
+    level[i] = max(base[i], 1 + max{ level[j] : C[i, j] }),  invalid -> -1
+
+``base`` (default all-zero) is the cross-window carry-over floor: the
+overlapped engines pass the carry frontier of the previous window there,
+so a task cannot start before the tail waves it conflicts with have
+drained (core/records.carry_frontier). With base = 0 this reduces to the
+classic recurrence ``level[i] = 1 + max{level[j]}`` (else 0).
 
 Robust to arbitrary (not necessarily lower-triangular) conflict matrices:
 entries pointing at tasks not yet processed (j >= i) or at invalid tasks
@@ -14,15 +20,20 @@ import jax.numpy as jnp
 
 
 @jax.jit
-def wave_levels_ref(conflicts: jax.Array, valid: jax.Array) -> jax.Array:
-    """[W, W] bool-ish conflicts + [W] bool valid -> [W] int32 levels."""
+def wave_levels_ref(conflicts: jax.Array, valid: jax.Array,
+                    base: jax.Array | None = None) -> jax.Array:
+    """[W, W] bool-ish conflicts + [W] bool valid (+ optional [W] int32
+    non-negative base floor) -> [W] int32 levels."""
     w = conflicts.shape[0]
     conflicts = conflicts.astype(bool)
+    if base is None:
+        base = jnp.zeros((w,), dtype=jnp.int32)
+    base = base.astype(jnp.int32)
 
     def body(levels, i):
         row = conflicts[i]  # [W] bools over earlier tasks
         dep_levels = jnp.where(row, levels, -1)
-        lvl = jnp.max(dep_levels, initial=-1) + 1
+        lvl = jnp.maximum(jnp.max(dep_levels, initial=-1) + 1, base[i])
         lvl = jnp.where(valid[i], lvl, -1)
         levels = levels.at[i].set(lvl)
         return levels, None

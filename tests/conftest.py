@@ -1,10 +1,94 @@
-"""Shared fixtures. NOTE: no XLA_FLAGS device-count override here — smoke
-tests and benches must see the real single CPU device; only the dry-run
-(and the subprocess-based sharding tests) force placeholder devices."""
+"""Shared fixtures and assertion helpers. NOTE: no XLA_FLAGS device-count
+override here — smoke tests and benches must see the real single CPU
+device; only the dry-run (and the subprocess-based sharding tests) force
+placeholder devices.
+
+``BASE_SEED`` (env ``MABS_TEST_SEED``, default 0) offsets every seeded
+sweep in the differential harness; CI runs the tier-1 suite under two
+distinct values to catch seed-dependent schedule bugs (a wave order that
+only breaks for particular conflict draws).
+
+The engine assertion helpers live here (plain functions, importable as
+``from conftest import ...`` whenever the tests directory is on the
+path — the subprocess-based multi-device tests add it) so the
+differential harness and the existing engine tests share one definition
+of "bit-exact vs the oracle" and one definition of sane overlap stats.
+"""
+import os
+
 import jax
 import pytest
+
+BASE_SEED = int(os.environ.get("MABS_TEST_SEED", "0"))
 
 
 @pytest.fixture(scope="session")
 def key():
     return jax.random.key(0)
+
+
+@pytest.fixture(scope="session")
+def base_seed():
+    return BASE_SEED
+
+
+def assert_engine_matches_oracle(model, state0, total, *, engine,
+                                 window=32, strict=True, seed=0,
+                                 oracle_state=None, **engine_kwargs):
+    """Run ``total`` tasks through ``engine`` and assert every state leaf
+    is bit-identical to the sequential oracle; returns the engine stats.
+
+    ``engine`` is a registry name or a prebuilt Engine instance (the
+    differential harness reuses instances across totals to amortize
+    compilation). Pass ``oracle_state`` to reuse a precomputed oracle
+    result (the harness runs many engines against one oracle run).
+    """
+    import jax.numpy as jnp
+
+    from repro.core import ProtocolConfig, run_engine, run_oracle
+
+    cfg = ProtocolConfig(window=window, strict=strict)
+    if isinstance(engine, str):
+        out, stats = run_engine(model, state0, total, seed=seed, config=cfg,
+                                engine=engine, **engine_kwargs)
+    else:
+        out, stats = engine.run(state0, total, seed=seed)
+        engine = engine.name  # for the assertion message below
+    if oracle_state is None:
+        oracle_state = run_oracle(model, state0, total, seed=seed,
+                                  config=cfg)
+    flat_o, _ = jax.tree_util.tree_flatten_with_path(oracle_state)
+    flat_e = jax.tree_util.tree_leaves(out)
+    assert len(flat_o) == len(flat_e)
+    for (path, ref), got in zip(flat_o, flat_e):
+        assert bool(jnp.all(got == ref)), (
+            f"engine {engine!r} diverged from the oracle on leaf "
+            f"{jax.tree_util.keystr(path)} (total={total}, window={window}, "
+            f"seed={seed})")
+    return stats
+
+
+def assert_overlap_stats_monotone(stats, *, window, barrier_stats=None):
+    """Sanity envelope for the overlapped engines' carry-over stats:
+    depths are bounded by the window's wave count, counters are
+    non-negative and mutually consistent, and — when the matching
+    barrier run is provided — overlap never *increases* the executed
+    wave count (the monotone-improvement guarantee: fused waves strictly
+    merge the barrier schedule, task for task)."""
+    assert stats.get("overlap") is True
+    assert stats["n_boundaries"] == max(stats["n_windows"] - 1, 0)
+    assert 0 <= stats["mean_overlap_depth"] <= window
+    assert 0 <= stats["max_overlap_depth"] <= window
+    assert stats["mean_overlap_depth"] <= stats["max_overlap_depth"] or (
+        stats["n_boundaries"] == 0)
+    assert stats["overlap_tasks_early"] >= 0
+    assert stats["overlap_tasks_early"] <= stats["total_tasks"]
+    assert 0 <= stats["carry_frontier_mean"] <= stats["carry_frontier_max"] \
+        or stats["n_boundaries"] == 0
+    assert stats["carry_frontier_max"] <= window
+    if stats["max_overlap_depth"] == 0:
+        assert stats["overlap_tasks_early"] == 0
+    if barrier_stats is not None:
+        assert stats["total_waves"] <= barrier_stats["total_waves"], (
+            "overlapped run executed more waves than the barrier run")
+        assert stats["total_tasks"] == barrier_stats["total_tasks"]

@@ -5,6 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import assert_engine_matches_oracle
 from repro.core import ProtocolConfig, run_engine, run_oracle, run_wavefront
 from repro.engine import (
     ENGINES,
@@ -20,10 +21,13 @@ from repro.topology import ring, watts_strogatz
 
 
 def test_registry_contents():
-    assert {"sequential", "wavefront", "sharded"} <= set(ENGINES)
+    assert {"sequential", "wavefront", "wavefront_overlap", "sharded",
+            "sharded_replicated", "sharded_overlap"} <= set(ENGINES)
     assert get_engine("wavefront") is WavefrontEngine
     assert get_engine("sequential") is SequentialEngine
     assert get_engine("sharded") is ShardedEngine
+    assert get_engine("wavefront_overlap").default_overlap
+    assert get_engine("sharded_overlap").default_overlap
     with pytest.raises(ValueError, match="unknown engine"):
         get_engine("gpu-magic")
 
@@ -43,10 +47,8 @@ def test_make_engine_and_interface():
 def test_wavefront_engine_bitexact(total):
     m = VoterModel(watts_strogatz(64, 4, 0.2, jax.random.key(5)))
     st0 = m.init_state(jax.random.key(1))
-    cfg = ProtocolConfig(window=32, strict=True)
-    wf, stats = run_wavefront(m, st0, total, seed=2, config=cfg)
-    sq = run_oracle(m, st0, total, seed=2, config=cfg)
-    assert bool(jnp.all(wf["opinions"] == sq["opinions"]))
+    stats = assert_engine_matches_oracle(m, st0, total, engine="wavefront",
+                                         window=32, seed=2)
     assert stats["total_waves"] >= 1
 
 
@@ -68,10 +70,8 @@ def test_sharded_engine_exact_on_default_mesh():
     multi-device sweep runs in the subprocess tests)."""
     m = VoterModel(ring(48, 4))
     st0 = m.init_state(jax.random.key(3))
-    cfg = ProtocolConfig(window=32, strict=True)
-    sh, stats = run_engine(m, st0, 70, seed=1, config=cfg, engine="sharded")
-    sq = run_oracle(m, st0, 70, seed=1, config=cfg)
-    assert bool(jnp.all(sh["opinions"] == sq["opinions"]))
+    stats = assert_engine_matches_oracle(m, st0, 70, engine="sharded",
+                                         window=32, seed=1)
     assert stats["n_devices"] == jax.device_count()
 
 

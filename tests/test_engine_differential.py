@@ -1,0 +1,263 @@
+"""Cross-engine differential harness — the guard rail for overlapped
+execution.
+
+Overlapped cross-window execution is the easiest place to silently break
+sequential semantics (a carry frontier that misses one hazard class
+produces *plausible* wrong trajectories), so every engine in the
+registry is pinned bit-exactly to the sequential oracle over the full
+scenario matrix:
+
+    model    ∈ {voter, SIS, Axelrod, SIRS}
+  × topology ∈ {ring, lattice2d, Watts-Strogatz, Erdos-Renyi,
+                Barabasi-Albert}
+  × engine   ∈ {sequential, wavefront, wavefront_overlap, sharded,
+                sharded_replicated, sharded_overlap}
+  × full / padded-partial windows,
+
+under 8 virtual host devices (the sharded engines' acceptance mesh; the
+subprocess pattern of test_engine_sharded.py keeps the main process on
+its default single device). The sweep is *seeded* fuzz: every draw is
+offset by ``MABS_TEST_SEED`` (conftest.BASE_SEED), and CI runs the suite
+under two distinct base seeds — a schedule bug that only fires for
+particular conflict draws fails one of the two lanes.
+
+Overlap stats are additionally checked for the monotone envelope
+(``conftest.assert_overlap_stats_monotone``): depths bounded by the
+window, counters consistent, and — vs the matching barrier run — the
+fused schedule never executes *more* waves.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import (
+    BASE_SEED,
+    assert_engine_matches_oracle,
+    assert_overlap_stats_monotone,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: every array engine in the registry (sequential doubles as the oracle)
+ALL_ENGINES = ("sequential", "wavefront", "wavefront_overlap",
+               "sharded", "sharded_replicated", "sharded_overlap")
+
+
+def run_py(code: str, timeout=560):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    # src for the package, tests for the shared conftest helpers
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(REPO, "src"), os.path.join(REPO, "tests")])
+    p = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    assert p.returncode == 0, p.stderr[-4000:]
+    return p.stdout
+
+
+# --------------------------------------------------------------------------
+# helpers shared with the subprocess sweeps (kept importable: the inner
+# scripts exec this module's source to avoid duplicating the matrix)
+
+def topology_matrix(key):
+    """The five topology families, sized for the harness (n small enough
+    that the full matrix compiles in CI, n chosen so 8 devices need the
+    padded shard path for most families)."""
+    from repro.topology import (
+        barabasi_albert,
+        connect_isolated,
+        erdos_renyi,
+        lattice2d,
+        ring,
+        watts_strogatz,
+    )
+
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    return {
+        "ring": ring(50, 4),
+        "lattice2d": lattice2d(7, 7, neighborhood="von_neumann"),
+        "watts_strogatz": connect_isolated(
+            watts_strogatz(50, 4, 0.2, k1), k2),
+        "erdos_renyi": connect_isolated(erdos_renyi(50, 0.1, k3), k4),
+        "barabasi_albert": barabasi_albert(50, 2, k5),
+    }
+
+
+def make_model(name, topo):
+    from repro.mabs.axelrod import AxelrodConfig, AxelrodModel
+    from repro.mabs.sir import SIRConfig, SIRModel
+    from repro.mabs.sis import SISModel
+    from repro.mabs.voter import VoterModel
+
+    n = topo.n_nodes
+    if name == "voter":
+        return VoterModel(topo)
+    if name == "sis":
+        return SISModel(topo)
+    if name == "axelrod":
+        return AxelrodModel(AxelrodConfig(n_agents=n, n_features=3, q=3),
+                            topology=topo)
+    if name == "sirs":
+        s = 7 if n % 7 == 0 else 10
+        return SIRModel(SIRConfig(n_agents=n, k=4, subset_size=s),
+                        topology=topo)
+    raise ValueError(name)
+
+
+def sweep_one_model(mname, *, window=16):
+    """The differential sweep for one model: all topologies × all
+    registry engines × full and padded-partial window totals, bit-exact
+    vs the oracle, with the overlap-stat envelope on overlapped runs."""
+    from repro.core import ProtocolConfig, run_oracle
+    from repro.engine import make_engine
+
+    cfg = ProtocolConfig(window=window, strict=True)
+    topos = topology_matrix(jax.random.key(BASE_SEED + 11))
+    for tname, topo in topos.items():
+        model = make_model(mname, topo)
+        st0 = model.init_state(jax.random.key(BASE_SEED + 1))
+        # 2 full windows; ring additionally runs the full-windows-only
+        # case — 44 = 2 full + 1 padded partial window of 12
+        totals = (32, 44) if tname == "ring" else (44,)
+        engines = {e: make_engine(e, model, window=window, strict=True)
+                   for e in ALL_ENGINES}
+        for total in totals:
+            oracle = run_oracle(model, st0, total, seed=BASE_SEED + 2,
+                                config=cfg)
+            for ename, eng in engines.items():
+                stats = assert_engine_matches_oracle(
+                    model, st0, total, engine=eng, window=window,
+                    seed=BASE_SEED + 2, oracle_state=oracle)
+                if ename.endswith("_overlap"):
+                    assert_overlap_stats_monotone(stats, window=window)
+        print(f"{mname:8s} {tname:16s} OK", flush=True)
+
+
+# --------------------------------------------------------------------------
+# the acceptance matrix: one subprocess per model, 8 virtual devices
+
+@pytest.mark.parametrize("model", ["voter", "sis", "axelrod", "sirs"])
+def test_differential_matrix_8dev(model):
+    src_path = os.path.abspath(__file__)
+    out = run_py(f"""
+        import jax
+        assert jax.device_count() == 8, jax.device_count()
+        src = open({src_path!r}).read()
+        ns = {{"__name__": "differential_inner", "__file__": {src_path!r}}}
+        exec(compile(src, {src_path!r}, "exec"), ns)
+        ns["sweep_one_model"]({model!r})
+        print("MATRIX-OK")
+    """)
+    assert "MATRIX-OK" in out
+
+
+# --------------------------------------------------------------------------
+# in-process checks (default single-device view)
+
+def test_overlap_monotone_vs_barrier():
+    """Overlap must merge waves, never add them — and actually overlap
+    on a graph with independence to exploit."""
+    from repro.core import ProtocolConfig, run_engine
+    from repro.topology import watts_strogatz
+
+    m = make_model("voter",
+                   watts_strogatz(64, 4, 0.2, jax.random.key(BASE_SEED + 5)))
+    st0 = m.init_state(jax.random.key(BASE_SEED + 1))
+    cfg = ProtocolConfig(window=32, strict=True)
+    _, barrier = run_engine(m, st0, 100, seed=BASE_SEED + 2, config=cfg,
+                            engine="wavefront")
+    stats = assert_engine_matches_oracle(
+        m, st0, 100, engine="wavefront_overlap", window=32,
+        seed=BASE_SEED + 2)
+    assert_overlap_stats_monotone(stats, window=32, barrier_stats=barrier)
+    assert stats["mean_overlap_depth"] > 0, (
+        "sparse voter windows must overlap across the boundary")
+    assert stats["overlap_tasks_early"] > 0
+
+
+def test_overlap_seeded_fuzz_wavefront():
+    """Seeded fuzz: random (seed, total) draws through the overlapped
+    wavefront engine vs the oracle — totals hit full, partial and
+    single-window cases."""
+    import numpy as np
+
+    from repro.topology import watts_strogatz
+
+    rng = np.random.RandomState(BASE_SEED + 77)
+    m = make_model("sis",
+                   watts_strogatz(48, 4, 0.3, jax.random.key(BASE_SEED)))
+    st0 = m.init_state(jax.random.key(BASE_SEED + 3))
+    for _ in range(4):
+        seed = int(rng.randint(1000))
+        total = int(rng.randint(1, 80))
+        stats = assert_engine_matches_oracle(
+            m, st0, total, engine="wavefront_overlap", window=16, seed=seed)
+        assert_overlap_stats_monotone(stats, window=16)
+
+
+def test_overlap_nonstrict_layout_agreement():
+    """Under the paper's non-strict record rule engines may diverge from
+    the oracle, but the two overlapped engines run the identical fused
+    schedule — sharding stays a pure layout transform of it."""
+    from repro.core import ProtocolConfig, run_engine
+    from repro.topology import watts_strogatz
+
+    m = make_model("voter",
+                   watts_strogatz(64, 4, 0.2, jax.random.key(BASE_SEED + 9)))
+    st0 = m.init_state(jax.random.key(BASE_SEED + 4))
+    cfg = ProtocolConfig(window=32, strict=False)
+    ov, _ = run_engine(m, st0, 100, seed=BASE_SEED + 5, config=cfg,
+                       engine="wavefront_overlap")
+    sh, _ = run_engine(m, st0, 100, seed=BASE_SEED + 5, config=cfg,
+                       engine="sharded_overlap")
+    assert bool(jnp.all(ov["opinions"] == sh["opinions"]))
+
+
+def test_overlap_predicate_only_model():
+    """Models without footprints route the cross-window record check
+    through the broadcast pairwise predicate (no conflict kernel) — the
+    overlapped engine must stay bit-exact there too."""
+    from repro.topology import ring
+
+    class PredicateVoter(type(make_model("voter", ring(32, 4)))):
+        def task_footprint(self, recipes):
+            return None
+
+        def conflicts(self, a, b, *, strict=True):
+            c = (a["u"] == b["v"]) | (a["v"] == b["v"])
+            if strict:
+                c = c | (a["v"] == b["u"])
+            return c
+
+    m = PredicateVoter(ring(40, 4))
+    st0 = m.init_state(jax.random.key(BASE_SEED + 6))
+    stats = assert_engine_matches_oracle(
+        m, st0, 70, engine="wavefront_overlap", window=24,
+        seed=BASE_SEED + 7)
+    assert_overlap_stats_monotone(stats, window=24)
+
+
+def test_overlap_knob_routes_through_config():
+    """ProtocolConfig.overlap flips any windowed engine; the barrier
+    engines raise nothing and the sequential engine ignores it."""
+    from repro.core import ProtocolConfig, run_engine
+    from repro.topology import ring
+
+    m = make_model("voter", ring(32, 4))
+    st0 = m.init_state(jax.random.key(0))
+    cfg = ProtocolConfig(window=16, overlap=True)
+    _, stats = run_engine(m, st0, 48, seed=1, config=cfg, engine="wavefront")
+    assert stats["overlap"] is True
+    cfg_off = ProtocolConfig(window=16, overlap=False)
+    _, stats = run_engine(m, st0, 48, seed=1, config=cfg_off,
+                          engine="wavefront_overlap")
+    assert stats["overlap"] is False
+    # sequential accepts (and ignores) the knob
+    _, stats = run_engine(m, st0, 48, seed=1, config=cfg, engine="sequential")
+    assert stats["mean_parallelism"] == 1.0

@@ -170,6 +170,130 @@ def test_halo_fallback_without_row_contracts():
     assert "OK" in out
 
 
+def test_halo_degenerate_width_falls_back_to_replication():
+    """halo width >= N must drop to the replicated layout at build time
+    (shipping the halo would cost more than the full state) while staying
+    bit-exact — including the overlap case, where the *pair* halo
+    (2·W·slots) is the operative width: a window size whose single halo
+    still beats N can exceed it once doubled."""
+    out = run_py("""
+        import jax, jax.numpy as jnp
+        assert jax.device_count() == 8
+        from repro.core import ProtocolConfig, run_engine, run_oracle
+        from repro.mabs.voter import VoterModel
+        from repro.topology import ring
+
+        # voter: halo slots = 1 read + 1 write = 2 per task
+        cfg = ProtocolConfig(window=32, strict=True)
+
+        # W=32 -> halo 64 >= 48 agents: replicated, but still exact
+        m = VoterModel(ring(48, 4))
+        st0 = m.init_state(jax.random.key(0))
+        sh, stats = run_engine(m, st0, 70, seed=1, config=cfg,
+                               engine="sharded")
+        sq = run_oracle(m, st0, 70, seed=1, config=cfg)
+        assert bool(jnp.all(sh["opinions"] == sq["opinions"]))
+        assert not stats["halo"], stats
+        assert stats["per_wave_gather_rows"] == 48  # padded N, full state
+        assert stats["per_wave_comm_bytes"] == stats["full_state_bytes"]
+
+        # N=100: single halo 64 < 100 engages, pair halo 128 >= 100 does not
+        m = VoterModel(ring(100, 4))
+        st0 = m.init_state(jax.random.key(0))
+        sh, stats = run_engine(m, st0, 150, seed=1, config=cfg,
+                               engine="sharded")
+        assert stats["halo"] and stats["per_wave_gather_rows"] == 64, stats
+        ov, ostats = run_engine(m, st0, 150, seed=1, config=cfg,
+                                engine="sharded_overlap")
+        sq = run_oracle(m, st0, 150, seed=1, config=cfg)
+        assert bool(jnp.all(ov["opinions"] == sq["opinions"]))
+        assert not ostats["halo"], ostats   # pair width tripped the guard
+
+        # and a size where even the pair halo wins: N=4096
+        from repro.topology import watts_strogatz
+        topo = watts_strogatz(4096, 4, 0.1, jax.random.key(2))
+        m = VoterModel(topo)
+        st0 = m.init_state(jax.random.key(7))
+        ov, ostats = run_engine(m, st0, 128, seed=3, config=cfg,
+                                engine="sharded_overlap")
+        sq = run_oracle(m, st0, 128, seed=3, config=cfg)
+        assert bool(jnp.all(ov["opinions"] == sq["opinions"]))
+        assert ostats["halo"] and ostats["per_wave_gather_rows"] == 128
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_halo_probe_mixed_contracts():
+    """The construction-time probe must treat a model with only *one* of
+    the two row contracts as contract-less: auto-route to replication,
+    and reject halo=True loudly."""
+    out = run_py("""
+        import jax, jax.numpy as jnp
+        assert jax.device_count() == 8
+        from repro.core import ProtocolConfig, run_engine, run_oracle
+        from repro.engine import make_engine
+        from repro.mabs.voter import VoterModel
+        from repro.topology import ring
+
+        class WriteOnlyVoter(VoterModel):
+            def task_read_agents(self, recipes):
+                return None   # writes declared, reads not
+
+        m = WriteOnlyVoter(ring(100, 4))
+        st0 = m.init_state(jax.random.key(0))
+        cfg = ProtocolConfig(window=32, strict=True)
+        sh, stats = run_engine(m, st0, 100, seed=1, config=cfg,
+                               engine="sharded")
+        sq = run_oracle(m, st0, 100, seed=1, config=cfg)
+        assert bool(jnp.all(sh["opinions"] == sq["opinions"]))
+        assert not stats["halo"]
+        try:
+            make_engine("sharded", m, window=32, halo=True)
+        except ValueError as e:
+            assert "task_read_agents" in str(e)
+        else:
+            raise AssertionError("halo=True must reject mixed contracts")
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_single_device_mesh_degenerates_to_no_comm():
+    """A sharded engine built on a single-device mesh must degenerate to
+    the single-device semantics: one shard owns everything, every task
+    is owned, the halo gather is a self-psum — bit-exact, n_devices=1,
+    and the same totals as the wavefront engine."""
+    out = run_py("""
+        import jax, jax.numpy as jnp
+        assert jax.device_count() == 8
+        from repro.core import ProtocolConfig, run_engine, run_oracle
+        from repro.engine import make_engine
+        from repro.mabs.sis import SISModel
+        from repro.topology import watts_strogatz
+
+        topo = watts_strogatz(512, 4, 0.1, jax.random.key(2))
+        m = SISModel(topo)
+        st0 = m.init_state(jax.random.key(7))
+        cfg = ProtocolConfig(window=64, strict=True)
+        sq = run_oracle(m, st0, 150, seed=3, config=cfg)
+        for ename in ("sharded", "sharded_overlap", "sharded_replicated"):
+            eng = make_engine(ename, m, window=64,
+                              devices=jax.devices()[:1])
+            sh, stats = eng.run(st0, 150, seed=3)
+            assert stats["n_devices"] == 1, (ename, stats)
+            assert bool(jnp.all(sh["states"] == sq["states"])), ename
+        wf, wstats = run_engine(m, st0, 150, seed=3, config=cfg,
+                                engine="wavefront")
+        sh, sstats = make_engine("sharded", m, window=64,
+                                 devices=jax.devices()[:1]).run(
+                                     st0, 150, seed=3)
+        assert sstats["total_waves"] == wstats["total_waves"]
+        print("OK")
+    """)
+    assert "OK" in out
+
+
 def test_sharded_strict_only_guarantee_documented():
     """Under the paper's non-strict record rule the engines may diverge
     from the oracle (missing anti-dependences) — but sharded and

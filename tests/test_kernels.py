@@ -26,6 +26,32 @@ def test_conflict_sweep(w, strict, backend):
     assert bool(jnp.all(out == ref))
 
 
+@pytest.mark.parametrize("wi,wj", [(128, 128), (96, 160), (256, 64), (7, 13)])
+@pytest.mark.parametrize("strict", [True, False])
+@pytest.mark.parametrize("backend", ["pallas", "jnp"])
+def test_conflict_block_sweep(wi, wj, strict, backend):
+    """Rectangular cross-window block (the carry-over record check):
+    both backends vs the jnp oracle, including window sizes that pad up
+    to the tile grid and asymmetric footprint widths."""
+    from repro.kernels.conflict.ops import conflict_block
+    from repro.kernels.conflict.ref import conflict_block_ref
+
+    reads_i = rng.randint(-1, 50, size=(wi, 3)).astype(np.int32)
+    writes_i = rng.randint(-1, 50, size=(wi, 1)).astype(np.int32)
+    reads_j = rng.randint(-1, 50, size=(wj, 2)).astype(np.int32)
+    writes_j = rng.randint(-1, 50, size=(wj, 2)).astype(np.int32)
+    valid_i = rng.rand(wi) < 0.9
+    valid_j = rng.rand(wj) < 0.9
+    out = conflict_block(reads_i, writes_i, reads_j, writes_j,
+                         valid_i, valid_j, strict=strict, backend=backend)
+    ref = conflict_block_ref(
+        jnp.asarray(reads_i), jnp.asarray(writes_i), jnp.asarray(reads_j),
+        jnp.asarray(writes_j), jnp.asarray(valid_i), jnp.asarray(valid_j),
+        strict=strict)
+    assert out.shape == (wi, wj)
+    assert bool(jnp.all(out == ref))
+
+
 # ---------------------------------------------------------------- axelrod
 @pytest.mark.parametrize("w,f", [(128, 3), (128, 100), (256, 500), (128, 128)])
 def test_axelrod_kernel_sweep(w, f):

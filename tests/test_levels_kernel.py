@@ -55,6 +55,46 @@ def test_levels_pallas_shapes(w):
     assert bool(jnp.all(out == ref))
 
 
+# ------------------------------------------------- carry-over base floor
+def _brute_levels_with_base(conf, valid, base):
+    """O(W²) host-side oracle for the floored recurrence."""
+    w = conf.shape[0]
+    lv = np.full(w, -1, np.int64)
+    for i in range(w):
+        if not valid[i]:
+            continue
+        deps = [lv[j] for j in range(i) if conf[i, j]]
+        lv[i] = max(int(base[i]), (max(deps) + 1) if deps else 0)
+    return lv
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_levels_base_floor_matches_brute_force(seed):
+    """The overlapped engines' carry frontier enters as a per-task level
+    floor; scan ref and blocked Pallas kernel must both honor it."""
+    conf, valid = _random_window(seed)
+    rng = np.random.RandomState(seed + 1000)
+    base = rng.randint(0, 9, size=conf.shape[0])
+    brute = _brute_levels_with_base(conf, valid, base)
+    ref = wave_levels_ref(jnp.asarray(conf), jnp.asarray(valid),
+                          jnp.asarray(base, jnp.int32))
+    out = wave_levels_pallas(jnp.asarray(conf), jnp.asarray(valid),
+                             jnp.asarray(base, jnp.int32), interpret=True)
+    assert (np.asarray(ref) == brute).all()
+    assert bool(jnp.all(out == ref))
+
+
+def test_levels_base_zero_is_classic_recurrence():
+    conf, valid = _random_window(5)
+    zero = jnp.zeros((conf.shape[0],), jnp.int32)
+    assert bool(jnp.all(
+        wave_levels_ref(jnp.asarray(conf), jnp.asarray(valid))
+        == wave_levels_ref(jnp.asarray(conf), jnp.asarray(valid), zero)))
+    assert bool(jnp.all(
+        wave_levels(jnp.asarray(conf), jnp.asarray(valid))
+        == wave_levels(jnp.asarray(conf), jnp.asarray(valid), base=zero)))
+
+
 def test_levels_op_backends_and_default():
     conf, valid = _random_window(11)
     ref = wave_levels_ref(jnp.asarray(conf), jnp.asarray(valid))

@@ -109,6 +109,40 @@ def test_generators_sparse_dense_equivalence(name, build):
     assert bool(jnp.all(topo.degrees == again.degrees))
 
 
+def test_barabasi_albert_chunked_equivalence():
+    """Builder-equivalence regression for the chunked attachment fast
+    path: chunk=1 freezes the endpoint multiset at every single arrival,
+    which is exactly what the sequential scan does — the two must be
+    bit-identical. A chunk larger than the arrival count degenerates to
+    the pure warm-up (sequential) prefix and must also be identical."""
+    for n, m in ((64, 2), (200, 3)):
+        key = jax.random.fold_in(KEY, n)
+        seq = barabasi_albert(n, m, key)
+        for chunk in (1, 10 * n):
+            fast = barabasi_albert(n, m, key, chunk=chunk)
+            assert bool(jnp.all(seq.neighbors == fast.neighbors)), (n, chunk)
+            assert bool(jnp.all(seq.degrees == fast.degrees)), (n, chunk)
+
+
+def test_barabasi_albert_chunked_structure():
+    """chunk > 1 changes the realization (degrees lag by up to a block)
+    but must still produce a valid BA-shaped simple graph: exactly m
+    edges per arrival plus the complete seed, no self loops, no
+    duplicate neighbors, every node attached."""
+    n, m, chunk = 300, 3, 32
+    topo = barabasi_albert(n, m, jax.random.fold_in(KEY, 7), chunk=chunk)
+    seed_sz = m + 1
+    expected_edges = seed_sz * (seed_sz - 1) // 2 + (n - seed_sz) * m
+    assert int(topo.n_edges) == expected_edges
+    nbrs, deg = np.asarray(topo.neighbors), np.asarray(topo.degrees)
+    assert deg.min() >= m
+    for v in range(n):
+        row = nbrs[v][: deg[v]]
+        assert v not in row
+        assert len(set(row.tolist())) == deg[v]
+        assert (nbrs[v][deg[v]:] == PAD).all()
+
+
 def test_adjacency_guard_above_dense_limit():
     t = ring(DENSE_LIMIT + 2, 2)
     with pytest.raises(ValueError, match="dense"):
