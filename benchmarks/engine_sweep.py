@@ -3,16 +3,25 @@
 For each scenario in {voter, SIS, Axelrod} x window size x device count,
 runs the same task stream through the ``wavefront`` (single-device),
 ``wavefront_overlap`` (cross-window overlapped waves), ``sharded``
-(halo-exchange shard_map over the agent axis), ``sharded_overlap``
-(overlap + pair halo) and ``sharded_replicated`` (full-state all_gather)
-engines and reports end-to-end throughput (tasks/s, scheduling +
-execution included), the schedule shape, for the sharded engines the
-per-wave communication volume (gathered rows / payload bytes per device
-vs the full state), and for the overlapped engines the carry-over
-columns (mean/max overlap depth — tail waves of window k shared with
-head waves of window k+1 — early-task counts and the carry frontier),
-so BENCH_engine.json captures the halo comm win and the barrier-removal
+(per-wave halo split over the agent axis), ``sharded_overlap`` (overlap
++ per-fused-wave slabs), ``sharded_window_halo`` (the monolithic
+window/pair-halo middle rung) and ``sharded_replicated`` (full-state
+all_gather) engines and reports end-to-end throughput (tasks/s,
+scheduling + execution included), the schedule shape, for the sharded
+engines the per-wave communication volume (rows / payload bytes
+actually shipped per device per wave vs the monolithic window halo and
+the full state — ``comm_reduction_vs_window_halo`` is the split's win),
+and for the overlapped engines the carry-over columns (mean/max overlap
+depth, early-task counts and the carry frontier), so BENCH_engine.json
+captures the per-wave split win, the halo win and the barrier-removal
 win alongside tasks/s.
+
+A second row family (``kind: "tn"``) is the fig3-style T(W, n) cost-
+model sweep (ROADMAP item): wavefront-engine seconds/task for voter and
+SIS over the five topology families × agent counts × window sizes, the
+MABS analog of the paper's T(s, n) subset-size sweep — it runs in the
+single-device subprocess so its timings share the engine rows'
+conditions.
 
 Device counts are realized per subprocess via
 ``--xla_force_host_platform_device_count`` so one invocation sweeps
@@ -22,9 +31,10 @@ and sweeps prefixes of ``jax.devices()``.
 
 Emits BENCH_engine.json next to the repo root (or --out PATH):
 
-  {"meta": {...}, "rows": [{"model", "engine", "window", "n_devices",
-   "n_agents", "total_tasks", "tasks_per_s", "total_waves",
-   "mean_parallelism", "seconds"}, ...]}
+  {"meta": {...}, "rows": [{"kind": "engine", "model", "engine",
+   "window", "n_devices", "n_agents", "total_tasks", "tasks_per_s",
+   "total_waves", "mean_parallelism", "seconds", ...comm/overlap...},
+   {"kind": "tn", "model", "topology", "n_agents", "window", ...}, ...]}
 
 Run:  PYTHONPATH=src python benchmarks/engine_sweep.py [--quick]
 """
@@ -35,6 +45,84 @@ import json
 import os
 import subprocess
 import sys
+
+ENGINES = ("wavefront", "wavefront_overlap", "sharded", "sharded_overlap",
+           "sharded_window_halo", "sharded_replicated")
+
+#: T(W, n) sweep grid (fig3-style): families × agent counts × windows
+TN_FAMILIES = ("ring", "lattice2d", "watts_strogatz", "erdos_renyi",
+               "barabasi_albert")
+TN_AGENTS = (1024, 4096, 16384)
+TN_WINDOWS = (64, 256)
+
+
+def _tn_topology(name: str, n: int, key):
+    from repro.topology import (
+        barabasi_albert,
+        connect_isolated,
+        erdos_renyi,
+        lattice2d,
+        ring,
+        watts_strogatz,
+    )
+
+    import jax
+
+    if name == "ring":
+        return ring(n, 4)
+    if name == "lattice2d":
+        side = int(round(n ** 0.5))
+        assert side * side == n, n
+        return lattice2d(side, side, neighborhood="von_neumann")
+    k1, k2 = jax.random.split(key)
+    if name == "watts_strogatz":
+        return connect_isolated(watts_strogatz(n, 4, 0.1, k1), k2)
+    if name == "erdos_renyi":
+        return connect_isolated(erdos_renyi(n, 4.0 / (n - 1), k1), k2)
+    if name == "barabasi_albert":
+        return barabasi_albert(n, 2, k1)
+    raise ValueError(name)
+
+
+def _tn_sweep(args) -> list[dict]:
+    """fig3-style T(W, n): single-device wavefront seconds/task for
+    voter and SIS over the topology families."""
+    import jax
+
+    from repro.engine import make_engine
+    from repro.mabs.sis import SISModel
+    from repro.mabs.voter import VoterModel
+    from repro.utils.timing import median_time
+
+    rows = []
+    for fam in TN_FAMILIES:
+        for n in TN_AGENTS:
+            topo = _tn_topology(fam, n, jax.random.key(11))
+            for mname, make in (("voter", VoterModel), ("sis", SISModel)):
+                model = make(topo)
+                state = model.init_state(jax.random.key(1))
+                for window in TN_WINDOWS:
+                    total = window * 2
+                    eng = make_engine("wavefront", model, window=window)
+                    _, stats = eng.run(state, total, seed=2)  # warmup
+                    sec = median_time(
+                        lambda: eng.run(state, total, seed=2)[0],
+                        repeats=args.repeats, warmup=0)
+                    rows.append({
+                        "kind": "tn",
+                        "model": mname,
+                        "topology": fam,
+                        "engine": "wavefront",
+                        "n_agents": int(n),
+                        "window": int(window),
+                        "total_tasks": int(total),
+                        "seconds": float(sec),
+                        "tasks_per_s": float(total / sec),
+                        "total_waves": int(stats["total_waves"]),
+                        "mean_parallelism": float(stats["mean_parallelism"]),
+                    })
+                    print("ROW " + json.dumps(rows[-1]), flush=True)
+    return rows
 
 
 def _inner(args) -> None:
@@ -48,6 +136,9 @@ def _inner(args) -> None:
     from repro.topology import watts_strogatz
     from repro.utils.timing import median_time
 
+    if args.tn_only:
+        _tn_sweep(args)
+        return
     n = args.n
     topo = watts_strogatz(n, 4, 0.1, jax.random.key(0))
     models = {
@@ -60,8 +151,7 @@ def _inner(args) -> None:
         state = model.init_state(jax.random.key(1))
         for window in args.windows:
             total = window * args.windows_per_run
-            for ename in ("wavefront", "wavefront_overlap", "sharded",
-                          "sharded_overlap", "sharded_replicated"):
+            for ename in ENGINES:
                 if ename.startswith("sharded") and jax.device_count() == 1 \
                         and args.skip_sharded_1dev:
                     continue
@@ -70,6 +160,7 @@ def _inner(args) -> None:
                 sec = median_time(lambda: eng.run(state, total, seed=2)[0],
                                   repeats=args.repeats, warmup=0)
                 rows.append({
+                    "kind": "engine",
                     "model": mname,
                     "engine": ename,
                     "window": int(window),
@@ -80,10 +171,18 @@ def _inner(args) -> None:
                     "total_waves": int(stats["total_waves"]),
                     "mean_parallelism": float(stats["mean_parallelism"]),
                     "seconds": float(sec),
-                    # comm-volume accounting (sharded engines only)
+                    # comm-volume accounting (sharded engines only):
+                    # per-wave rows/bytes actually shipped, the per-wave
+                    # split columns and the monolithic halo reference
                     "halo": stats.get("halo"),
+                    "halo_split": stats.get("halo_split"),
                     "per_wave_gather_rows": stats.get("per_wave_gather_rows"),
                     "per_wave_comm_bytes": stats.get("per_wave_comm_bytes"),
+                    "per_wave_split_rows": stats.get("per_wave_split_rows"),
+                    "window_halo_rows": stats.get("window_halo_rows"),
+                    "window_halo_bytes": stats.get("window_halo_bytes"),
+                    "comm_reduction_vs_window_halo":
+                        stats.get("comm_reduction_vs_window_halo"),
                     "full_state_bytes": stats.get("full_state_bytes"),
                     "comm_bytes_total": stats.get("comm_bytes_total"),
                     # carry-over accounting (overlapped engines only)
@@ -95,6 +194,8 @@ def _inner(args) -> None:
                     "carry_frontier_max": stats.get("carry_frontier_max"),
                 })
                 print("ROW " + json.dumps(rows[-1]), flush=True)
+    if args.tn_sweep:
+        _tn_sweep(args)
 
 
 def _spawn(device_count: int, argv) -> list[dict]:
@@ -114,9 +215,16 @@ def _spawn(device_count: int, argv) -> list[dict]:
     rows = [json.loads(line[4:]) for line in p.stdout.splitlines()
             if line.startswith("ROW ")]
     for r in rows:
+        if r.get("kind") == "tn":
+            print(f"tn {r['model']:8s} {r['topology']:16s} "
+                  f"n={r['n_agents']:6d} W={r['window']:4d} "
+                  f"{r['tasks_per_s']:10.0f} tasks/s "
+                  f"par={r['mean_parallelism']:6.2f}")
+            continue
         comm = ("" if r.get("per_wave_comm_bytes") is None else
                 f" comm/wave={r['per_wave_comm_bytes']:>8d}B"
-                f" (full={r['full_state_bytes']}B)")
+                f" (halo={r['window_halo_bytes'] or '—'}B"
+                f" full={r['full_state_bytes']}B)")
         ov = ("" if not r.get("overlap") else
               f" depth={r['mean_overlap_depth']:5.2f}"
               f" carry={r['carry_frontier_mean']:5.2f}")
@@ -128,10 +236,11 @@ def _spawn(device_count: int, argv) -> list[dict]:
 
 def main():
     ap = argparse.ArgumentParser()
-    # default sized so the halo beats the full state for every scenario:
-    # the widest halo below is SIS at W=256 with nr = max_degree+1 on the
-    # WS(n, 4, 0.1) graph (max_degree ~8-10) -> ~256·(10+1+1) ≈ 3k rows,
-    # which must stay < n for the halo layout to engage
+    # default sized so the monolithic halo rung beats the full state for
+    # every scenario: the widest halo below is SIS at W=256 with
+    # nr = max_degree+1 on the WS(n, 4, 0.1) graph (max_degree ~8-10)
+    # -> ~256·(10+1+1) ≈ 3k rows, which must stay < n for that rung to
+    # engage (the per-wave split rung has no width guard)
     ap.add_argument("--n", type=int, default=4096, help="agents")
     ap.add_argument("--windows", type=int, nargs="+", default=[128, 256])
     ap.add_argument("--devices", type=int, nargs="+", default=[1, 4, 8])
@@ -140,6 +249,11 @@ def main():
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--skip-sharded-1dev", action="store_true",
                     help="skip the sharded engine on 1-device meshes")
+    ap.add_argument("--no-tn-sweep", dest="tn_sweep", action="store_false",
+                    help="skip the fig3-style T(W, n) cost-model rows")
+    ap.add_argument("--tn-sweep", action="store_true", default=True,
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--tn-only", action="store_true", help=argparse.SUPPRESS)
     ap.add_argument("--run-inner", action="store_true", help=argparse.SUPPRESS)
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "..", "BENCH_engine.json"))
@@ -147,17 +261,21 @@ def main():
     if args.quick:
         args.n, args.windows, args.devices = 256, [64, 128], [1, 8]
         args.windows_per_run, args.repeats = 2, 1
+        args.tn_sweep = False
 
     if args.run_inner:
         _inner(args)
         return
 
-    inner_argv = (["--n", str(args.n), "--windows",
-                   *map(str, args.windows),
-                   "--windows-per-run", str(args.windows_per_run),
-                   "--repeats", str(args.repeats)]
-                  + (["--skip-sharded-1dev"] if args.skip_sharded_1dev
-                     else []))
+    def inner_argv(with_tn: bool, tn_only: bool = False) -> list[str]:
+        return (["--n", str(args.n), "--windows",
+                 *map(str, args.windows),
+                 "--windows-per-run", str(args.windows_per_run),
+                 "--repeats", str(args.repeats)]
+                + (["--skip-sharded-1dev"] if args.skip_sharded_1dev
+                   else [])
+                + ([] if with_tn else ["--no-tn-sweep"])
+                + (["--tn-only"] if tn_only else []))
 
     import jax  # after arg parsing: the parent keeps its default devices
 
@@ -171,24 +289,35 @@ def main():
 
         buf = io.StringIO()
         with redirect_stdout(buf):
-            _inner(args)
+            _inner(args)   # ends with the T(W, n) rows when tn_sweep is on
         rows = [json.loads(line[4:]) for line in buf.getvalue().splitlines()
                 if line.startswith("ROW ")]
         print(buf.getvalue(), end="")
     else:
         for d in args.devices:
-            rows.extend(_spawn(d, inner_argv))
+            # the T(W, n) rows are single-device by construction: attach
+            # them to the d=1 subprocess so timings share its conditions
+            rows.extend(_spawn(d, inner_argv(args.tn_sweep and d == 1)))
+        if args.tn_sweep and 1 not in args.devices:
+            # no d=1 lane requested: run the T(W, n) rows in their own
+            # single-device subprocess rather than silently dropping them
+            rows.extend(_spawn(1, inner_argv(True, tn_only=True)))
 
+    engine_rows = [r for r in rows if r.get("kind") != "tn"]
     payload = {
         "meta": {
             "n_agents": args.n,
             "windows": [int(w) for w in args.windows],
             # from the rows, not the request: on TPU the sweep runs on the
             # one real mesh regardless of --devices
-            "device_counts": sorted({r["n_devices"] for r in rows}),
+            "device_counts": sorted({r["n_devices"] for r in engine_rows}),
             "backend": "tpu" if on_tpu else "cpu",
             "virtual_devices": not on_tpu,
             "strict": True,
+            "tn_sweep": {"families": list(TN_FAMILIES),
+                         "n_agents": list(TN_AGENTS),
+                         "windows": list(TN_WINDOWS)} if args.tn_sweep
+                        else None,
         },
         "rows": rows,
     }

@@ -144,19 +144,28 @@ def mabs_topology_tables(bench):
 
 def mabs_engine_table(bench):
     meta, rows = bench["meta"], bench["rows"]
+    engine_rows = [r for r in rows if r.get("kind", "engine") == "engine"]
+    tn_rows = [r for r in rows if r.get("kind") == "tn"]
     print(f"\n#### Engine throughput, comm volume and window overlap "
           f"(n = {meta.get('n_agents')} agents, backend = "
           f"{meta.get('backend')}"
           f"{', virtual devices' if meta.get('virtual_devices') else ''})\n")
     print("| model | W | devices | engine | tasks/s | mean par "
-          "| comm/wave/device | full state | comm reduction "
-          "| overlap depth | carry frontier |")
-    print("|---|---|---|---|---|---|---|---|---|---|---|")
-    for r in rows:
+          "| comm/wave/device | window halo | full state "
+          "| red. ×halo | red. ×full | overlap depth | carry frontier |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in engine_rows:
         comm = r.get("per_wave_comm_bytes")
+        halo_ref = r.get("window_halo_bytes")
         full = r.get("full_state_bytes")
-        red = (f"{full / comm:.1f}×" if comm and full
-               and r.get("halo") else "—")
+        # red. ×halo: the per-wave split's win over the monolithic
+        # window/pair halo; red. ×full: any halo layout's win over the
+        # replicated all_gather
+        red_h = (f"{r['comm_reduction_vs_window_halo']:.1f}×"
+                 if r.get("comm_reduction_vs_window_halo")
+                 and r.get("halo") else "—")
+        red_f = (f"{full / comm:.1f}×" if comm and full
+                 and r.get("halo") else "—")
         if r.get("overlap"):
             # mean/max waves of window k shared with window k+1's head,
             # and the carry-over level floor the cross block imposed
@@ -169,7 +178,41 @@ def mabs_engine_table(bench):
         print(f"| {r['model']} | {r['window']} | {r['n_devices']} "
               f"| {r['engine']} | {r['tasks_per_s']:,.0f} "
               f"| {r['mean_parallelism']:.2f} | {_fmt_kb(comm)} "
-              f"| {_fmt_kb(full)} | {red} | {depth} | {carry} |")
+              f"| {_fmt_kb(halo_ref)} | {_fmt_kb(full)} "
+              f"| {red_h} | {red_f} | {depth} | {carry} |")
+    if tn_rows:
+        mabs_tn_table(tn_rows)
+
+
+def mabs_tn_table(rows):
+    """fig3-style T(W, n) cost-model sweep: wavefront seconds per task
+    for voter/SIS across the topology families (the MABS analog of the
+    paper's T(s, n) subset-size figure)."""
+    print("\n#### Cost-model T(W, n) sweep "
+          "(wavefront engine, µs per task)\n")
+    byn = sorted({r["n_agents"] for r in rows})
+    print("| model | topology | W | "
+          + " | ".join(f"n={n:,}" for n in byn) + " | waves/window |")
+    print("|---|---|---|" + "---|" * (len(byn) + 1))
+    keys = sorted({(r["model"], r["topology"], r["window"])
+                   for r in rows})
+    for model, topo, window in keys:
+        cells, waves = [], []
+        for n in byn:
+            match = [r for r in rows
+                     if (r["model"], r["topology"], r["window"],
+                         r["n_agents"]) == (model, topo, window, n)]
+            if match:
+                r = match[0]
+                cells.append(f"{1e6 * r['seconds'] / r['total_tasks']:.1f}")
+                waves.append(f"{r['total_waves'] / max(r['total_tasks'] // r['window'], 1):.1f}")
+            else:
+                cells.append("—")
+                waves.append("—")
+        # one waves-per-window entry per n column (schedule contention
+        # varies with n), in the same order as the time cells
+        print(f"| {model} | {topo} | {window} | "
+              + " | ".join(cells) + f" | {'/'.join(waves)} |")
 
 
 def mabs_report(root="."):

@@ -5,13 +5,15 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 crossing the device boundary.
 
 The ``sharded`` engine shards agent state into contiguous row blocks over
-a 1-D ("agents",) mesh and executes each wave under shard_map: each wave
-gathers only its *halo* — the window's read ∪ write rows, derived at
-schedule time from the model's ``task_read_agents``/``task_write_agents``
-contracts — instead of all-gathering the O(N) state; each device runs
-only the tasks whose write targets fall in its rows and keeps its local
-block of the result. Recipes, conflict matrix, wave levels, and the halo
-list stay replicated — they are window-local. The trajectory is asserted
+a 1-D ("agents",) mesh and executes each wave under shard_map: wave w
+gathers only its *per-wave halo slab* — the read ∪ write rows of the
+tasks at level w, split out of the window's halo at schedule time from
+the model's ``task_read_agents``/``task_write_agents`` contracts —
+instead of re-gathering the whole window halo (let alone all-gathering
+the O(N) state); each device runs only the tasks whose write targets
+fall in its rows and keeps its local block of the result. Recipes,
+conflict matrix, wave levels, and the slab layout stay replicated —
+they are window-local. The trajectory is asserted
 bit-identical to the single-device wavefront engine and hence to
 sequential execution — distribution, like wavefront scheduling itself,
 is semantics-free.
@@ -40,9 +42,11 @@ def main():
     same = bool(jnp.all(out["opinions"] == ref["opinions"]))
     print(f"sharded over {stats['n_devices']} devices; "
           f"mean wave parallelism {stats['mean_parallelism']:.1f}")
-    print(f"halo exchange: {stats['halo']} — per wave "
+    print(f"halo exchange: {stats['halo']} "
+          f"(per-wave split: {stats['halo_split']}) — per wave "
           f"{stats['per_wave_comm_bytes']} B/device gathered "
-          f"(full state would be {stats['full_state_bytes']} B)")
+          f"(monolithic window halo {stats['window_halo_bytes']} B, "
+          f"full state {stats['full_state_bytes']} B)")
     print(f"bit-identical to single-device trajectory: {same}")
     assert same
     print("OK")

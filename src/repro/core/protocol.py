@@ -2,14 +2,16 @@
 
 Engines are pluggable (``repro.engine``): ``sequential`` (the oracle),
 ``wavefront`` (single-device vectorized waves), ``sharded`` (waves
-sharded over the agent axis of a device mesh; its window schedules carry
-the halo row lists derived from the models' ``task_read_agents`` /
-``task_write_agents`` contracts, so per-wave communication is
-O(max_degree · window) rows instead of the full O(N) state), and
-``sharded_replicated`` (the all_gather layout, the fallback for models
-without the row contracts), plus the paper-faithful discrete-event
-simulator. All array engines run the identical task stream; under the
-strict hazard rule they are bit-exact vs each other.
+sharded over the agent axis of a device mesh; its schedules split the
+halo rows derived from the models' ``task_read_agents`` /
+``task_write_agents`` contracts *per wave*, so wave w's communication is
+O(rows wave w touches) instead of the whole window's halo — let alone
+the full O(N) state), ``sharded_window_halo`` (the monolithic
+window-halo rung) and ``sharded_replicated`` (the all_gather layout,
+the fallback for models without the row contracts), plus the
+paper-faithful discrete-event simulator. All array engines run the
+identical task stream; under the strict hazard rule they are bit-exact
+vs each other.
 
 The paper's "choices in applying the protocol" (§3.4) map to:
   chain granularity  -> the model's task definition (e.g. agents per subset)

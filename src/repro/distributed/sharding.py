@@ -111,8 +111,12 @@ def halo_gather(local: jax.Array, halo: jax.Array, *, shard_n: int,
     holds global row ids (-1 = unused, gathers zeros). Each real row has
     exactly one owner (id // shard_n), so masking non-owned slots to zero
     and psum-ing over the axis reconstructs the rows everywhere — one
-    all-reduce of h rows instead of an all_gather of N.
+    all-reduce of h rows instead of an all_gather of N. A zero-width halo
+    (a fully-drained wave's slab in overlapped mode) is a clean no-op: no
+    collective is issued rather than a degenerate 0-row psum.
     """
+    if halo.shape[0] == 0:
+        return jnp.zeros((0,) + local.shape[1:], local.dtype)
     dev = jax.lax.axis_index(axis)
     owner = jnp.where(halo >= 0, halo // shard_n, -1)
     idx = jnp.clip(halo - dev * shard_n, 0, shard_n - 1)
@@ -127,6 +131,105 @@ def halo_scatter(full: jax.Array, halo: jax.Array,
     (-1 slots dropped; duplicate slots write identical values)."""
     rows = jnp.where(halo >= 0, halo, full.shape[0])
     return full.at[rows].set(gathered, mode="drop")
+
+
+# ---- per-wave halo splitting (schedule-time comm specialization) ----------
+#
+# The window halo above is monolithic: every wave re-gathers the whole
+# window's read ∪ write rows, O(W·slots) per wave however little wave w
+# actually touches. But wave levels are known at schedule time, so the
+# halo can be split into per-wave slabs: wave w gathers only the rows of
+# tasks at level w. Per-wave slab widths are heavily skewed (level 0
+# usually holds most of a window's tasks, tail waves a handful), so a
+# rectangular [n_waves, rows_per_wave_max] padding would be dominated by
+# wave 0 and win nothing; instead the slabs are laid out *wave-major in
+# fixed-size chunks* — wave w owns the chunk range
+# [chunk_start[w], chunk_start[w+1]), each chunk a static-width gather —
+# and the executor issues a dynamic number of chunk gathers per wave.
+# Shipped volume per wave is ceil(rows_w / chunk)·chunk ≈ rows_w, summed
+# over the window ≈ one window halo instead of n_waves of them. Every
+# shape is static, so the layout builds inside the jitted schedule and
+# no host sync or per-window recompilation is ever needed; ``chunk``
+# trades collective count (latency) against padding waste (bandwidth).
+
+def wave_slab_counts(rows: jax.Array, levels: jax.Array, *,
+                     n_waves_max: int) -> jax.Array:
+    """Valid-row count of each wave's slab.
+
+    rows [W, slots] int32 per-task read ∪ write state rows (-1 padded);
+    levels [W] int32 wave level per task (-1 = invalid/executed). Returns
+    [n_waves_max] int32. Unlike ``window_halo``, -1 row slots are dropped
+    — the slab layout is allowed to be tighter than the static halo.
+    """
+    slots = rows.shape[1]
+    wave = jnp.repeat(jnp.asarray(levels, jnp.int32), slots)
+    ok = (rows.reshape(-1) >= 0) & (wave >= 0) & (wave < n_waves_max)
+    key = jnp.where(ok, wave, n_waves_max)
+    return jax.ops.segment_sum(ok.astype(jnp.int32), key,
+                               num_segments=n_waves_max + 1)[:n_waves_max]
+
+
+def wave_halo_split(rows: jax.Array, levels: jax.Array, *,
+                    n_waves_max: int, chunk: int,
+                    n_chunks_max: int | None = None):
+    """Partition a window's read ∪ write rows into per-wave chunked slabs.
+
+    rows [W, slots] int32 (-1 padded), levels [W] int32 (-1 dropped —
+    executed tasks of a draining window contribute nothing). Returns
+
+      slabs       [n_chunks_max, chunk] int32, -1 padded: wave-major
+                  chunk layout; wave w's rows fill chunks
+                  [chunk_start[w], chunk_start[w+1]) contiguously,
+      chunk_start [n_waves_max + 1] int32 cumulative chunk offsets
+                  (an empty wave owns zero chunks -> a clean no-op).
+
+    ``n_chunks_max`` defaults to the worst case
+    ceil(W·slots / chunk) + n_waves_max (every wave pays at most one
+    partially-filled chunk); rows whose wave is >= n_waves_max are
+    dropped (an overlapped pair's next-window tasks beyond the drain
+    horizon — they are re-split after rebasing). Pure jnp with static
+    shapes: runs inside the jitted schedule on replicated values, so
+    every device derives the identical layout without communicating.
+    """
+    w_tasks, slots = rows.shape
+    if n_chunks_max is None:
+        n_chunks_max = -(-(w_tasks * slots) // chunk) + n_waves_max
+    flat = rows.reshape(-1)
+    wave = jnp.repeat(jnp.asarray(levels, jnp.int32), slots)
+    ok = (flat >= 0) & (wave >= 0) & (wave < n_waves_max)
+    key = jnp.where(ok, wave, n_waves_max)
+    counts = wave_slab_counts(rows, levels, n_waves_max=n_waves_max)
+    n_chunks = -(-counts // chunk)
+    chunk_start = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                   jnp.cumsum(n_chunks).astype(jnp.int32)])
+    # rank of each kept entry within its wave: stable sort groups waves
+    # contiguously (sentinel n_waves_max sinks dropped entries past the
+    # real segments), rank = sorted position - segment start
+    order = jnp.argsort(key, stable=True)
+    k_sorted, r_sorted = key[order], flat[order]
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts).astype(jnp.int32)])
+    rank = (jnp.arange(k_sorted.shape[0], dtype=jnp.int32)
+            - starts[jnp.minimum(k_sorted, n_waves_max)])
+    # flat position in the chunked layout: wave w's chunk range, row rank
+    pos = chunk_start[jnp.minimum(k_sorted, n_waves_max)] * chunk + rank
+    keep = (k_sorted < n_waves_max) & (pos < n_chunks_max * chunk)
+    slabs = jnp.full((n_chunks_max * chunk,), -1, jnp.int32)
+    slabs = slabs.at[jnp.where(keep, pos, n_chunks_max * chunk)].set(
+        r_sorted, mode="drop")
+    return slabs.reshape(n_chunks_max, chunk), chunk_start
+
+
+def wave_halo_gather(local: jax.Array, slabs: jax.Array, c: jax.Array, *,
+                     shard_n: int, axis: str = AGENT_AXIS):
+    """Gather chunk ``c`` of a per-wave slab layout from a row-sharded
+    array: returns (rows [chunk, ...], slab [chunk]) — the slab is handed
+    back so the caller can scatter the gathered rows without re-indexing.
+    Zero-width chunks (slabs built with chunk=0) no-op without issuing a
+    collective, matching ``halo_gather``.
+    """
+    slab = jax.lax.dynamic_index_in_dim(slabs, c, axis=0, keepdims=False)
+    return halo_gather(local, slab, shard_n=shard_n, axis=axis), slab
 
 
 # --------------------------------------------------------------------------

@@ -11,7 +11,7 @@ scenario matrix:
   × topology ∈ {ring, lattice2d, Watts-Strogatz, Erdos-Renyi,
                 Barabasi-Albert}
   × engine   ∈ {sequential, wavefront, wavefront_overlap, sharded,
-                sharded_replicated, sharded_overlap}
+                sharded_window_halo, sharded_replicated, sharded_overlap}
   × full / padded-partial windows,
 
 under 8 virtual host devices (the sharded engines' acceptance mesh; the
@@ -43,9 +43,12 @@ from conftest import (
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
-#: every array engine in the registry (sequential doubles as the oracle)
+#: every array engine in the registry (sequential doubles as the oracle;
+#: ``sharded`` runs the per-wave halo split, ``sharded_window_halo`` the
+#: monolithic middle rung of the comm ladder)
 ALL_ENGINES = ("sequential", "wavefront", "wavefront_overlap",
-               "sharded", "sharded_replicated", "sharded_overlap")
+               "sharded", "sharded_window_halo", "sharded_replicated",
+               "sharded_overlap")
 
 
 def run_py(code: str, timeout=560):

@@ -90,12 +90,12 @@ def test_sharded_bitexact_axelrod_and_sir():
     assert "OK" in out
 
 
-def test_halo_comm_volume_below_full_state():
-    """The tentpole claim: with the row contracts declared, the sharded
-    engine's per-wave comm is the degree-bounded halo — strictly below
-    the full-state bytes the replicated layout ships — while staying
-    bit-exact vs the oracle. Also pins the O(max_degree · window) halo
-    width and the replicated baseline's full-state accounting."""
+def test_halo_comm_volume_monotone_ladder():
+    """The comm ladder is monotone end to end: summed per-wave slab
+    bytes (split) <= window-halo bytes <= full-state bytes over the same
+    schedule, every rung bit-exact vs the oracle. Also pins the
+    monolithic rung's O(max_degree · window) halo width and the
+    replicated baseline's full-state accounting."""
     out = run_py("""
         import jax, jax.numpy as jnp
         assert jax.device_count() == 8
@@ -111,23 +111,72 @@ def test_halo_comm_volume_below_full_state():
                                      topo.max_degree + 1)):
             m = make(topo)
             st0 = m.init_state(jax.random.key(7))
-            sh, stats = run_engine(m, st0, 256, seed=3, config=cfg,
-                                   engine="sharded")
             sq = run_oracle(m, st0, 256, seed=3, config=cfg)
-            assert bool(jnp.all(sh[leaf] == sq[leaf]))
-            assert stats["halo"], stats
-            # halo width = W * (reads + writes) rows, degree-bounded
-            assert stats["per_wave_gather_rows"] == 128 * (n_reads + 1)
-            assert stats["per_wave_comm_bytes"] < stats["full_state_bytes"]
-            assert stats["comm_bytes_total"] == (
-                stats["per_wave_comm_bytes"] * stats["total_waves"])
+            sp, stats = run_engine(m, st0, 256, seed=3, config=cfg,
+                                   engine="sharded")
+            assert bool(jnp.all(sp[leaf] == sq[leaf]))
+            assert stats["halo"] and stats["halo_split"], stats
+            # monolithic reference width = W * (reads + writes) rows
+            assert stats["window_halo_rows"] == 128 * (n_reads + 1)
+
+            mono, mstats = run_engine(m, st0, 256, seed=3, config=cfg,
+                                      engine="sharded_window_halo")
+            assert bool(jnp.all(mono[leaf] == sq[leaf]))
+            assert mstats["halo"] and not mstats["halo_split"]
+            assert mstats["per_wave_gather_rows"] == 128 * (n_reads + 1)
+            assert mstats["comm_bytes_total"] == (
+                mstats["per_wave_comm_bytes"] * mstats["total_waves"])
 
             rep, rstats = run_engine(m, st0, 256, seed=3, config=cfg,
                                      engine="sharded_replicated")
-            assert bool(jnp.all(rep[leaf] == sh[leaf]))
+            assert bool(jnp.all(rep[leaf] == sq[leaf]))
             assert not rstats["halo"]
             assert rstats["per_wave_comm_bytes"] == rstats["full_state_bytes"]
-            assert stats["per_wave_comm_bytes"] < rstats["per_wave_comm_bytes"]
+
+            # identical schedule across rungs -> comparable totals; the
+            # ladder must be monotone per wave and in total
+            assert stats["total_waves"] == mstats["total_waves"]
+            assert stats["per_wave_comm_bytes"] < mstats["per_wave_comm_bytes"]
+            assert mstats["per_wave_comm_bytes"] < rstats["per_wave_comm_bytes"]
+            assert stats["comm_bytes_total"] <= mstats["comm_bytes_total"]
+            assert mstats["comm_bytes_total"] <= rstats["comm_bytes_total"]
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_per_wave_comm_regression():
+    """CI comm-regression gate (engines-multidevice job): on the voter
+    and SIS smoke configs the per-wave split must ship strictly fewer
+    bytes per wave than the monolithic window halo, with per-config
+    reduction floors just below the measured values (the schedule-time
+    specialization is the point of the split; a layout regression shows
+    up here before it shows up in BENCH_engine.json)."""
+    out = run_py("""
+        import jax, jax.numpy as jnp
+        assert jax.device_count() == 8
+        from repro.core import ProtocolConfig, run_engine, run_oracle
+        from repro.mabs.sis import SISModel
+        from repro.mabs.voter import VoterModel
+        from repro.topology import watts_strogatz
+
+        topo = watts_strogatz(4096, 4, 0.1, jax.random.key(2))
+        for make, leaf, window, min_red in (
+                (VoterModel, "opinions", 128, 1.7),
+                (VoterModel, "opinions", 256, 2.5),
+                (SISModel, "states", 128, 2.5),
+                (SISModel, "states", 256, 4.0)):
+            cfg = ProtocolConfig(window=window, strict=True)
+            m = make(topo)
+            st0 = m.init_state(jax.random.key(7))
+            sp, stats = run_engine(m, st0, 2 * window, seed=3, config=cfg,
+                                   engine="sharded")
+            sq = run_oracle(m, st0, 2 * window, seed=3, config=cfg)
+            assert bool(jnp.all(sp[leaf] == sq[leaf]))
+            assert stats["halo_split"], stats
+            assert stats["per_wave_comm_bytes"] < stats["window_halo_bytes"]
+            red = stats["comm_reduction_vs_window_halo"]
+            assert red >= min_red, (make.__name__, window, stats)
         print("OK")
     """)
     assert "OK" in out
@@ -171,11 +220,14 @@ def test_halo_fallback_without_row_contracts():
 
 
 def test_halo_degenerate_width_falls_back_to_replication():
-    """halo width >= N must drop to the replicated layout at build time
-    (shipping the halo would cost more than the full state) while staying
-    bit-exact — including the overlap case, where the *pair* halo
-    (2·W·slots) is the operative width: a window size whose single halo
-    still beats N can exceed it once doubled."""
+    """The monolithic rung's build-time guard: halo width >= N must drop
+    to the replicated layout (shipping the whole halo would cost more
+    than the full state) while staying bit-exact — including the overlap
+    case, where the *pair* halo (2·W·slots) is the operative width: a
+    window size whose single halo still beats N can exceed it once
+    doubled. The split rung is exempt from the width guard (it ships
+    per-wave slabs, not the whole halo) and must stay engaged — and
+    exact — on the same degenerate shapes."""
     out = run_py("""
         import jax, jax.numpy as jnp
         assert jax.device_count() == 8
@@ -186,37 +238,53 @@ def test_halo_degenerate_width_falls_back_to_replication():
         # voter: halo slots = 1 read + 1 write = 2 per task
         cfg = ProtocolConfig(window=32, strict=True)
 
-        # W=32 -> halo 64 >= 48 agents: replicated, but still exact
+        # W=32 -> halo 64 >= 48 agents: the monolithic rung replicates,
+        # but still exact
         m = VoterModel(ring(48, 4))
         st0 = m.init_state(jax.random.key(0))
-        sh, stats = run_engine(m, st0, 70, seed=1, config=cfg,
-                               engine="sharded")
         sq = run_oracle(m, st0, 70, seed=1, config=cfg)
+        sh, stats = run_engine(m, st0, 70, seed=1, config=cfg,
+                               engine="sharded_window_halo")
         assert bool(jnp.all(sh["opinions"] == sq["opinions"]))
         assert not stats["halo"], stats
         assert stats["per_wave_gather_rows"] == 48  # padded N, full state
         assert stats["per_wave_comm_bytes"] == stats["full_state_bytes"]
+        # ...while the split rung needs no guard: per-wave slabs stay
+        # narrow even though the whole halo would not
+        sp, sstats = run_engine(m, st0, 70, seed=1, config=cfg,
+                                engine="sharded")
+        assert bool(jnp.all(sp["opinions"] == sq["opinions"]))
+        assert sstats["halo"] and sstats["halo_split"], sstats
 
         # N=100: single halo 64 < 100 engages, pair halo 128 >= 100 does not
         m = VoterModel(ring(100, 4))
         st0 = m.init_state(jax.random.key(0))
         sh, stats = run_engine(m, st0, 150, seed=1, config=cfg,
-                               engine="sharded")
+                               engine="sharded_window_halo")
         assert stats["halo"] and stats["per_wave_gather_rows"] == 64, stats
+        sq = run_oracle(m, st0, 150, seed=1, config=cfg)
+        ov, ostats = run_engine(m, st0, 150, seed=1, config=cfg,
+                                engine="sharded_window_halo", overlap=True)
+        assert bool(jnp.all(ov["opinions"] == sq["opinions"]))
+        # pair width tripped the guard: every fused drain replicated —
+        # only the partnerless final drain may use the single-window halo
+        assert ostats["comm_modes"].get("pair", 0) == 0, ostats
+        assert ostats["comm_modes"].get("full", 0) == ostats["n_boundaries"]
+        # split rung: fused-wave slabs beat both the pair halo and the
+        # full state on the same run
         ov, ostats = run_engine(m, st0, 150, seed=1, config=cfg,
                                 engine="sharded_overlap")
-        sq = run_oracle(m, st0, 150, seed=1, config=cfg)
         assert bool(jnp.all(ov["opinions"] == sq["opinions"]))
-        assert not ostats["halo"], ostats   # pair width tripped the guard
+        assert ostats["halo"] and ostats["halo_split"], ostats
 
         # and a size where even the pair halo wins: N=4096
         from repro.topology import watts_strogatz
         topo = watts_strogatz(4096, 4, 0.1, jax.random.key(2))
         m = VoterModel(topo)
         st0 = m.init_state(jax.random.key(7))
-        ov, ostats = run_engine(m, st0, 128, seed=3, config=cfg,
-                                engine="sharded_overlap")
         sq = run_oracle(m, st0, 128, seed=3, config=cfg)
+        ov, ostats = run_engine(m, st0, 128, seed=3, config=cfg,
+                                engine="sharded_window_halo", overlap=True)
         assert bool(jnp.all(ov["opinions"] == sq["opinions"]))
         assert ostats["halo"] and ostats["per_wave_gather_rows"] == 128
         print("OK")
@@ -277,7 +345,8 @@ def test_single_device_mesh_degenerates_to_no_comm():
         st0 = m.init_state(jax.random.key(7))
         cfg = ProtocolConfig(window=64, strict=True)
         sq = run_oracle(m, st0, 150, seed=3, config=cfg)
-        for ename in ("sharded", "sharded_overlap", "sharded_replicated"):
+        for ename in ("sharded", "sharded_overlap", "sharded_window_halo",
+                      "sharded_replicated"):
             eng = make_engine(ename, m, window=64,
                               devices=jax.devices()[:1])
             sh, stats = eng.run(st0, 150, seed=3)
