@@ -126,15 +126,30 @@ def _tn_sweep(args) -> list[dict]:
 
 
 def _inner(args) -> None:
-    """Runs inside one subprocess with a fixed device count."""
+    """Runs inside one subprocess with a fixed device count. With
+    ``--profile DIR`` the whole sweep runs under ``jax.profiler.trace``
+    (one subdirectory per device count), so the device timeline carries
+    the ``protocol.*`` named scopes of the kernels and halo gathers."""
+    import jax
+
+    from repro.obs.profiler import profile_session
+
+    logdir = (os.path.join(args.profile, f"d{jax.device_count()}")
+              if args.profile else None)
+    with profile_session(logdir):
+        _inner_body(args)
+
+
+def _inner_body(args) -> None:
     import jax
 
     from repro.engine import make_engine
     from repro.mabs.axelrod import AxelrodConfig, AxelrodModel
     from repro.mabs.sis import SISModel
     from repro.mabs.voter import VoterModel
+    from repro.obs.stats import row_keys
     from repro.topology import watts_strogatz
-    from repro.utils.timing import median_time
+    from repro.utils.timing import block_all, median_time
 
     if args.tn_only:
         _tn_sweep(args)
@@ -156,10 +171,13 @@ def _inner(args) -> None:
                         and args.skip_sharded_1dev:
                     continue
                 eng = make_engine(ename, model, window=window)
-                _, stats = eng.run(state, total, seed=2)  # warmup + stats
+                # warmup + stats; fence the warmup state so no queued
+                # device work leaks into the first timed repeat
+                out, stats = eng.run(state, total, seed=2)
+                block_all(out)
                 sec = median_time(lambda: eng.run(state, total, seed=2)[0],
                                   repeats=args.repeats, warmup=0)
-                rows.append({
+                row = {
                     "kind": "engine",
                     "model": mname,
                     "engine": ename,
@@ -171,28 +189,14 @@ def _inner(args) -> None:
                     "total_waves": int(stats["total_waves"]),
                     "mean_parallelism": float(stats["mean_parallelism"]),
                     "seconds": float(sec),
-                    # comm-volume accounting (sharded engines only):
-                    # per-wave rows/bytes actually shipped, the per-wave
-                    # split columns and the monolithic halo reference
-                    "halo": stats.get("halo"),
-                    "halo_split": stats.get("halo_split"),
-                    "per_wave_gather_rows": stats.get("per_wave_gather_rows"),
-                    "per_wave_comm_bytes": stats.get("per_wave_comm_bytes"),
-                    "per_wave_split_rows": stats.get("per_wave_split_rows"),
-                    "window_halo_rows": stats.get("window_halo_rows"),
-                    "window_halo_bytes": stats.get("window_halo_bytes"),
-                    "comm_reduction_vs_window_halo":
-                        stats.get("comm_reduction_vs_window_halo"),
-                    "full_state_bytes": stats.get("full_state_bytes"),
-                    "comm_bytes_total": stats.get("comm_bytes_total"),
-                    # carry-over accounting (overlapped engines only)
-                    "overlap": stats.get("overlap"),
-                    "mean_overlap_depth": stats.get("mean_overlap_depth"),
-                    "max_overlap_depth": stats.get("max_overlap_depth"),
-                    "overlap_tasks_early": stats.get("overlap_tasks_early"),
-                    "carry_frontier_mean": stats.get("carry_frontier_mean"),
-                    "carry_frontier_max": stats.get("carry_frontier_max"),
-                })
+                }
+                # the nullable comm + overlap columns (per-wave rows/bytes
+                # shipped, the monolithic references, the carry-over
+                # accounting) are derived from the stats registry — the
+                # declarations in repro/obs/stats.py own the row schema
+                row.update({k: stats.get(k)
+                            for k in row_keys("comm", "overlap")})
+                rows.append(row)
                 print("ROW " + json.dumps(rows[-1]), flush=True)
     if args.tn_sweep:
         _tn_sweep(args)
@@ -254,6 +258,11 @@ def main():
     ap.add_argument("--tn-sweep", action="store_true", default=True,
                     help=argparse.SUPPRESS)
     ap.add_argument("--tn-only", action="store_true", help=argparse.SUPPRESS)
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="run under jax.profiler.trace, writing a "
+                         "TensorBoard/Perfetto device profile per device "
+                         "count into DIR (protocol phases show up via the "
+                         "protocol.* named scopes)")
     ap.add_argument("--run-inner", action="store_true", help=argparse.SUPPRESS)
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "..", "BENCH_engine.json"))
@@ -274,6 +283,8 @@ def main():
                  "--repeats", str(args.repeats)]
                 + (["--skip-sharded-1dev"] if args.skip_sharded_1dev
                    else [])
+                + (["--profile", os.path.abspath(args.profile)]
+                   if args.profile else [])
                 + ([] if with_tn else ["--no-tn-sweep"])
                 + (["--tn-only"] if tn_only else []))
 
@@ -303,9 +314,16 @@ def main():
             # single-device subprocess rather than silently dropping them
             rows.extend(_spawn(1, inner_argv(True, tn_only=True)))
 
+    from repro.obs import provenance
+
     engine_rows = [r for r in rows if r.get("kind") != "tn"]
     payload = {
         "meta": {
+            # environment header (jax version, backend/device kind, git
+            # sha, stats schema version) — rendered by report.py mabs.
+            # NB: device_count is the parent process's view; the swept
+            # mesh sizes are in device_counts below.
+            "provenance": provenance(),
             "n_agents": args.n,
             "windows": [int(w) for w in args.windows],
             # from the rows, not the request: on TPU the sweep runs on the

@@ -1,6 +1,6 @@
 """Render benchmark artifacts as markdown tables.
 
-Two report families share this entry point:
+Four report families share this entry point:
 
   * LM dry-run/roofline (the historic default):
       PYTHONPATH=src python -m benchmarks.report [artifacts/dryrun]
@@ -8,6 +8,14 @@ Two report families share this entry point:
     BENCH_engine.json (scheduling parallelism, sparse-builder scaling,
     engine throughput + halo comm volume) into one markdown report:
       PYTHONPATH=src python -m benchmarks.report mabs [repo-root]
+  * Schedule "explain" — decodes one exported protocol trace
+    (repro.obs span tracer -> Chrome trace-event JSON) into the
+    schedule's shape: wave-size histogram, critical-path length,
+    per-device load imbalance and the comm-ledger breakdown per rung:
+      PYTHONPATH=src python -m benchmarks.report explain TRACE.json
+  * Trace timing summary — where the traced run's wall time went
+    (schedule vs execute vs boundary, per-window table):
+      PYTHONPATH=src python -m benchmarks.report trace TRACE.json
 
 Writes markdown to stdout (EXPERIMENTS.md / docs embed the output).
 """
@@ -215,6 +223,17 @@ def mabs_tn_table(rows):
               + " | ".join(cells) + f" | {'/'.join(waves)} |")
 
 
+def _provenance_line(meta):
+    """One-line environment header (benchmarks stamp it into meta)."""
+    p = (meta or {}).get("provenance")
+    if not p:
+        return None
+    return (f"jax {p.get('jax_version')} · backend {p.get('backend')} "
+            f"({p.get('device_kind')} ×{p.get('device_count')}) · "
+            f"git {p.get('git_sha') or 'unknown'} · "
+            f"stats v{p.get('stats_version')} · {p.get('timestamp')}")
+
+
 def mabs_report(root="."):
     print("### MABS protocol benchmarks (generated by benchmarks/report.py)")
     topo = _load_bench(root, "BENCH_topology.json")
@@ -224,15 +243,212 @@ def mabs_report(root="."):
               f"{os.path.abspath(root)} — run benchmarks/topology_sweep.py "
               "and benchmarks/engine_sweep.py first)")
         return
+    for name, bench in (("topology", topo), ("engine", eng)):
+        line = _provenance_line(bench.get("meta")) if bench else None
+        if line:
+            print(f"\n*{name} sweep: {line}*")
     if topo is not None:
         mabs_topology_tables(topo)
     if eng is not None:
         mabs_engine_table(eng)
 
 
+# --------------------------------------------------------------------------
+# protocol-trace reports (repro.obs span tracer -> Chrome trace JSON)
+
+
+def _load_trace(path):
+    """Load + schema-validate an exported protocol trace; returns the
+    event list."""
+    from repro.obs import validate_chrome_trace
+
+    with open(path) as f:
+        payload = json.load(f)
+    validate_chrome_trace(payload)
+    return payload["traceEvents"] if isinstance(payload, dict) else payload
+
+
+def _span_durations(events):
+    """Pair B/E events per (pid, tid) lane into (name, ts, dur, args)
+    tuples (the validator guarantees proper nesting)."""
+    spans = []
+    stacks: dict = {}
+    for ev in sorted((e for e in events if e.get("ph") in ("B", "E")),
+                     key=lambda e: e["ts"]):
+        lane = stacks.setdefault((ev["pid"], ev["tid"]), [])
+        if ev["ph"] == "B":
+            lane.append(ev)
+        else:
+            b = lane.pop()
+            spans.append((b["name"], b["ts"], ev["ts"] - b["ts"],
+                          b.get("args", {})))
+    return spans
+
+
+def _bar(frac, width=30):
+    n = int(round(frac * width))
+    return "█" * n + "·" * (width - n)
+
+
+def _trace_header(events):
+    runs = [e for e in events if e["name"] == "run" and e["ph"] == "B"]
+    if runs:
+        a = runs[0].get("args", {})
+        print(f"\nengine `{a.get('engine')}` · window {a.get('window')} · "
+              f"{a.get('total_tasks')} tasks · "
+              f"overlap {'on' if a.get('overlap') else 'off'}")
+    return runs[0].get("args", {}) if runs else {}
+
+
+def explain_report(path):
+    """Decode one protocol trace into the schedule's shape."""
+    events = _load_trace(path)
+    print(f"### Schedule explain — {os.path.basename(path)}")
+    run_args = _trace_header(events)
+    waves = [e for e in events
+             if e.get("ph") == "X" and e["name"] == "wave"]
+    gathers = [e for e in events
+               if e.get("ph") == "X" and e["name"] == "halo_gather"]
+    if not waves:
+        print("\n(no wave spans in this trace — nothing to explain)")
+        return
+
+    # ---- wave-size histogram (log2 buckets) + critical path
+    widths = [int(e["args"].get("width", 0)) for e in waves]
+    total_tasks = sum(widths)
+    n_waves = len(waves)
+    print(f"\n#### Wave-size histogram ({n_waves} executed waves, "
+          f"{total_tasks} tasks)\n")
+    buckets: dict = {}
+    for w in widths:
+        b = 0 if w == 0 else 1 << max(w - 1, 0).bit_length()
+        buckets[b] = buckets.get(b, 0) + 1
+    print("| wave width ≤ | waves | share |")
+    print("|---|---|---|")
+    for b in sorted(buckets):
+        frac = buckets[b] / n_waves
+        print(f"| {b} | {buckets[b]} | `{_bar(frac)}` {frac:5.1%} |")
+    # the waves of a run execute strictly in sequence (each is one fused
+    # vectorized step), so the executed wave count IS the schedule's
+    # critical-path length
+    print(f"\ncritical path: **{n_waves} waves** for {total_tasks} tasks "
+          f"-> mean parallelism {total_tasks / max(n_waves, 1):.2f} "
+          f"tasks/wave")
+    if run_args.get("window"):
+        seq = total_tasks  # the oracle's critical path: one task per step
+        print(f"(sequential baseline {seq} steps; wavefront speedup "
+              f"upper bound {seq / max(n_waves, 1):.2f}×)")
+
+    # ---- per-device load imbalance (sharded traces carry owned counts)
+    owned = [e["args"]["owned"] for e in waves if "owned" in e["args"]]
+    if owned:
+        d = len(owned[0])
+        totals = [sum(o[i] for o in owned) for i in range(d)]
+        mean = sum(totals) / d
+        print(f"\n#### Per-device load ({d} devices, owned tasks/device)\n")
+        print("| device | owned tasks | vs mean |")
+        print("|---|---|---|")
+        for i, t in enumerate(totals):
+            rel = t / mean if mean else 0.0
+            print(f"| {i} | {t} | `{_bar(min(rel / 2, 1.0))}` {rel:4.2f}× |")
+        # per-wave imbalance: max/mean owned across devices, averaged
+        per_wave = [max(o) * len(o) / max(sum(o), 1) for o in owned
+                    if sum(o)]
+        if per_wave:
+            print(f"\nper-wave imbalance (max/mean owned): mean "
+                  f"{sum(per_wave) / len(per_wave):.2f}×, "
+                  f"worst {max(per_wave):.2f}×  (1.0× = perfectly even)")
+
+    # ---- comm-ledger breakdown per rung
+    if gathers:
+        print("\n#### Comm ledger (per-device receive volume, by "
+              "comm-ladder rung)\n")
+        rungs: dict = {}
+        for e in gathers:
+            a = e["args"]
+            r = rungs.setdefault(a.get("rung", "?"),
+                                 {"waves": 0, "rows": 0, "bytes": 0})
+            r["waves"] += 1
+            r["rows"] += int(a.get("rows", 0))
+            r["bytes"] += int(a.get("bytes", 0))
+        total_b = sum(r["bytes"] for r in rungs.values()) or 1
+        print("| rung | waves | rows | bytes | share |")
+        print("|---|---|---|---|---|")
+        for name in ("split", "window_halo", "pair_halo", "full_state"):
+            if name not in rungs:
+                continue
+            r = rungs[name]
+            frac = r["bytes"] / total_b
+            print(f"| {name} | {r['waves']} | {r['rows']:,} "
+                  f"| {_fmt_kb(r['bytes'])} | `{_bar(frac)}` {frac:5.1%} |")
+    else:
+        print("\n(no halo_gather spans — single-device trace, no comm)")
+
+
+def trace_report(path):
+    """Where a traced run's wall time went (host-fenced span times)."""
+    events = _load_trace(path)
+    print(f"### Trace timing — {os.path.basename(path)}")
+    _trace_header(events)
+    spans = _span_durations(events)
+    if not spans:
+        print("\n(no B/E spans in this trace)")
+        return
+    run_dur = sum(d for n, _, d, _ in spans if n == "run") or 1.0
+    by_name: dict = {}
+    for name, _, dur, _ in spans:
+        if name == "run":
+            continue
+        c, t = by_name.get(name, (0, 0.0))
+        by_name[name] = (c + 1, t + dur)
+    print("\n#### Phase totals (host wall time, fenced — tracing "
+          "serializes the window pipeline)\n")
+    print("| phase | spans | total ms | share of run |")
+    print("|---|---|---|---|")
+    for name, (c, t) in sorted(by_name.items(), key=lambda kv: -kv[1][1]):
+        frac = t / run_dur
+        print(f"| {name} | {c} | {t / 1e3:.2f} "
+              f"| `{_bar(frac)}` {frac:5.1%} |")
+    # per-window schedule-vs-execute split
+    windows: dict = {}
+    for name, _, dur, args in spans:
+        if name not in ("schedule", "execute", "boundary"):
+            continue
+        w = windows.setdefault(args.get("index", "?"),
+                               {"n_waves": None, "rung": None})
+        w[name] = w.get(name, 0.0) + dur
+        if name == "execute":
+            w["n_waves"] = args.get("n_waves")
+            w["rung"] = args.get("rung")
+    if windows:
+        print("\n#### Per-window split\n")
+        print("| window | schedule ms | boundary ms | execute ms "
+              "| waves | rung |")
+        print("|---|---|---|---|---|---|")
+        for i in sorted(windows, key=str):
+            w = windows[i]
+            sch = w.get("schedule")
+            bnd = w.get("boundary")
+            exe = w.get("execute")
+            print(f"| {i} | {sch / 1e3:.2f}" if sch is not None
+                  else f"| {i} | —", end="")
+            print(f" | {bnd / 1e3:.2f}" if bnd is not None else " | —",
+                  end="")
+            print(f" | {exe / 1e3:.2f}" if exe is not None else " | —",
+                  end="")
+            print(f" | {w['n_waves'] if w['n_waves'] is not None else '—'} "
+                  f"| {w['rung'] or '—'} |")
+
+
 def main():
     if len(sys.argv) > 1 and sys.argv[1] == "mabs":
         mabs_report(sys.argv[2] if len(sys.argv) > 2 else ".")
+        return
+    if len(sys.argv) > 1 and sys.argv[1] in ("explain", "trace"):
+        if len(sys.argv) < 3:
+            sys.exit(f"usage: benchmarks.report {sys.argv[1]} TRACE.json")
+        (explain_report if sys.argv[1] == "explain"
+         else trace_report)(sys.argv[2])
         return
     d = sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun"
     recs = load(d)

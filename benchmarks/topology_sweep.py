@@ -187,8 +187,12 @@ def main():
 
     rows = run(n, windows)
     rows.extend(run_builds(build_ns))
+    from repro.obs import provenance
+
     payload = {
         "meta": {
+            # environment header — rendered by report.py mabs
+            "provenance": provenance(),
             "n_nodes": n,
             "windows": [int(w) for w in windows],
             "build_ns": [int(b) for b in build_ns],

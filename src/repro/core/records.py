@@ -43,15 +43,18 @@ def prefix_conflicts(
     Returns C [W, W] bool with C[i, j] == later-task-i-conflicts-with-j,
     zero outside j < i or where either task is invalid.
     """
+    from repro.obs.profiler import annotate
+
     w = valid.shape[0]
 
-    # Broadcast: rows = later task i, cols = earlier task j.
-    rows = jax.tree_util.tree_map(lambda x: x[:, None], recipes)
-    cols = jax.tree_util.tree_map(lambda x: x[None, :], recipes)
-    conf = conflict_fn(rows, cols, strict=strict)  # [W, W] via broadcasting
+    with annotate("protocol.conflict_predicate"):
+        # Broadcast: rows = later task i, cols = earlier task j.
+        rows = jax.tree_util.tree_map(lambda x: x[:, None], recipes)
+        cols = jax.tree_util.tree_map(lambda x: x[None, :], recipes)
+        conf = conflict_fn(rows, cols, strict=strict)  # [W, W] broadcast
 
-    lower = jnp.tril(jnp.ones((w, w), dtype=bool), k=-1)
-    return conf & lower & valid[:, None] & valid[None, :]
+        lower = jnp.tril(jnp.ones((w, w), dtype=bool), k=-1)
+        return conf & lower & valid[:, None] & valid[None, :]
 
 
 def window_conflicts(model, recipes, valid: jax.Array, *,
@@ -122,8 +125,11 @@ def carry_frontier(cross: jax.Array, levels_prev: jax.Array) -> jax.Array:
     pins every next-window task strictly after the tail waves it
     conflicts with, which is exactly the cross-window record guarantee.
     """
-    gated = jnp.where(cross, levels_prev[None, :] + 1, 0)
-    return jnp.max(gated, axis=1, initial=0).astype(jnp.int32)
+    from repro.obs.profiler import annotate
+
+    with annotate("protocol.carry_frontier"):
+        gated = jnp.where(cross, levels_prev[None, :] + 1, 0)
+        return jnp.max(gated, axis=1, initial=0).astype(jnp.int32)
 
 
 def wave_levels(conflicts: jax.Array, valid: jax.Array, *,

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.records import wave_levels, window_conflicts
+from repro.obs.profiler import annotate
 
 
 def execute_window(model, state, recipes, valid, *, strict: bool = True,
@@ -42,10 +43,12 @@ def execute_window(model, state, recipes, valid, *, strict: bool = True,
     def body(carry):
         w, st = carry
         mask = levels == w
-        st = model.execute_wave(st, recipes, mask)
+        with annotate("protocol.wave"):
+            st = model.execute_wave(st, recipes, mask)
         return w + 1, st
 
-    _, state = jax.lax.while_loop(cond, body, (jnp.int32(0), state))
+    with annotate("protocol.execute_window"):
+        _, state = jax.lax.while_loop(cond, body, (jnp.int32(0), state))
     return state, n_waves
 
 

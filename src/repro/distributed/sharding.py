@@ -34,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.obs.profiler import annotate
 from repro.utils.pytree import tree_map_with_path_str
 
 
@@ -117,20 +118,22 @@ def halo_gather(local: jax.Array, halo: jax.Array, *, shard_n: int,
     """
     if halo.shape[0] == 0:
         return jnp.zeros((0,) + local.shape[1:], local.dtype)
-    dev = jax.lax.axis_index(axis)
-    owner = jnp.where(halo >= 0, halo // shard_n, -1)
-    idx = jnp.clip(halo - dev * shard_n, 0, shard_n - 1)
-    rows = jnp.take(local, idx, axis=0)
-    sel = (owner == dev).reshape((-1,) + (1,) * (rows.ndim - 1))
-    return jax.lax.psum(jnp.where(sel, rows, 0), axis)
+    with annotate("protocol.halo_gather"):
+        dev = jax.lax.axis_index(axis)
+        owner = jnp.where(halo >= 0, halo // shard_n, -1)
+        idx = jnp.clip(halo - dev * shard_n, 0, shard_n - 1)
+        rows = jnp.take(local, idx, axis=0)
+        sel = (owner == dev).reshape((-1,) + (1,) * (rows.ndim - 1))
+        return jax.lax.psum(jnp.where(sel, rows, 0), axis)
 
 
 def halo_scatter(full: jax.Array, halo: jax.Array,
                  gathered: jax.Array) -> jax.Array:
     """Refresh rows ``halo`` of a full-size buffer with gathered values
     (-1 slots dropped; duplicate slots write identical values)."""
-    rows = jnp.where(halo >= 0, halo, full.shape[0])
-    return full.at[rows].set(gathered, mode="drop")
+    with annotate("protocol.halo_scatter"):
+        rows = jnp.where(halo >= 0, halo, full.shape[0])
+        return full.at[rows].set(gathered, mode="drop")
 
 
 # ---- per-wave halo splitting (schedule-time comm specialization) ----------
@@ -194,6 +197,13 @@ def wave_halo_split(rows: jax.Array, levels: jax.Array, *,
     w_tasks, slots = rows.shape
     if n_chunks_max is None:
         n_chunks_max = -(-(w_tasks * slots) // chunk) + n_waves_max
+    return _wave_halo_split(rows, levels, n_waves_max=n_waves_max,
+                            chunk=chunk, n_chunks_max=n_chunks_max)
+
+
+@annotate("protocol.wave_halo_split")
+def _wave_halo_split(rows, levels, *, n_waves_max, chunk, n_chunks_max):
+    slots = rows.shape[1]
     flat = rows.reshape(-1)
     wave = jnp.repeat(jnp.asarray(levels, jnp.int32), slots)
     ok = (flat >= 0) & (wave >= 0) & (wave < n_waves_max)
@@ -228,8 +238,9 @@ def wave_halo_gather(local: jax.Array, slabs: jax.Array, c: jax.Array, *,
     Zero-width chunks (slabs built with chunk=0) no-op without issuing a
     collective, matching ``halo_gather``.
     """
-    slab = jax.lax.dynamic_index_in_dim(slabs, c, axis=0, keepdims=False)
-    return halo_gather(local, slab, shard_n=shard_n, axis=axis), slab
+    with annotate("protocol.wave_halo_gather"):
+        slab = jax.lax.dynamic_index_in_dim(slabs, c, axis=0, keepdims=False)
+        return halo_gather(local, slab, shard_n=shard_n, axis=axis), slab
 
 
 # --------------------------------------------------------------------------

@@ -25,10 +25,14 @@ overlaps the wave execution of the current one on the device queue.
 from __future__ import annotations
 
 import abc
+from contextlib import nullcontext
 from typing import Any, Type
 
 import jax
 import jax.numpy as jnp
+
+from repro.obs.stats import finalize_stats
+from repro.obs.trace import TID_COMM, current_tracer
 
 ENGINES: dict[str, Type["Engine"]] = {}
 
@@ -163,6 +167,83 @@ class WindowedEngine(Engine):
     def _execute(self, state, sched):  # pragma: no cover - abstract
         raise NotImplementedError
 
+    # ------------------------------------------------------------- tracing
+    #
+    # Every hook below is reached only when a tracer is installed
+    # (``repro.obs.trace.tracing()``); the untraced run loops guard on a
+    # single ``current_tracer() is None`` check, so tracing off adds zero
+    # host syncs to the hot path. With tracing on, span boundaries fence
+    # with ``jax.block_until_ready`` — which deliberately serializes the
+    # double-buffered window pipeline to attribute wall time to the
+    # schedule vs execute halves (docs/observability.md).
+
+    def _trace_parts(self, sched, levels=None):
+        """(levels, write_agents, rows) of one window's schedule, for the
+        per-wave trace attributes. ``levels`` overrides the schedule's
+        own level vector (the overlapped loop re-levels and rebases).
+        None disables per-wave spans for this engine."""
+        return None
+
+    def _trace_wave_comm(self, np_parts, n_waves):
+        """Per-wave comm attributes (list of dicts with ``rung``/``rows``
+        /``bytes`` and optionally ``owned`` per-device task counts), or
+        None for engines that ship nothing (single device)."""
+        return None
+
+    def _trace_execute_args(self):
+        """Extra args for a just-closed execute span (e.g. the sharded
+        engine's comm-ladder rung)."""
+        return {}
+
+    def _dispatch_schedule(self, tr, base_key, start, count, *, index,
+                           ov=False):
+        """Dispatch one window's schedule, wrapped in a fenced span when
+        tracing is on."""
+        fn = self._schedule_ov if ov else self._schedule
+        if tr is None:
+            return fn(base_key, start, count)
+        with tr.span("schedule", index=index, start=start, count=count):
+            sched = fn(base_key, start, count)
+            jax.block_until_ready(sched)
+        return sched
+
+    def _trace_window(self, tr, sp, parts, n_waves):
+        """Emit per-wave spans (width-proportional attribution inside the
+        closed execute span ``sp``) and per-wave ``halo_gather`` spans.
+        ``parts`` holds one ``_trace_parts`` triple per live window (two
+        for a fused pair drain)."""
+        import numpy as np
+
+        parts = [p for p in parts if p is not None]
+        if n_waves <= 0 or not parts:
+            return
+        widths = np.zeros(n_waves, np.int64)
+        np_parts = []
+        for lv, wa, rows in parts:
+            lv = np.asarray(lv)
+            np_parts.append((lv,
+                             None if wa is None else np.asarray(wa),
+                             None if rows is None else np.asarray(rows)))
+            sel = lv[(lv >= 0) & (lv < n_waves)]
+            if sel.size:
+                widths[:] += np.bincount(sel, minlength=n_waves)[:n_waves]
+        comm = self._trace_wave_comm(np_parts, n_waves)
+        window = sp.args.get("index")
+        args = [{"window": window, "level": w, "width": int(widths[w])}
+                for w in range(n_waves)]
+        if comm is not None:
+            for a, c in zip(args, comm):
+                owned = c.pop("owned", None)
+                if owned is not None:
+                    a["owned"] = owned
+        slots = tr.subdivide(sp, "wave", widths.tolist(), args)
+        if comm is not None:
+            for w, ((ts, dur), c) in enumerate(zip(slots, comm)):
+                if c.get("rows"):
+                    tr.complete("halo_gather", ts, dur, tid=TID_COMM,
+                                window=window, level=w, attributed=True,
+                                **c)
+
     # ------------------------------------------------- cross-window overlap
     def _make_boundary(self):
         """Jitted boundary step for one window transition k -> k+1:
@@ -206,6 +287,7 @@ class WindowedEngine(Engine):
         return self._levels0_fn(conf, valid)
 
     def _run_overlapped(self, state: Any, total_tasks: int, *, seed: int = 0):
+        tr = current_tracer()
         base_key = jax.random.key(seed)
         state = self._prepare_state(state)
         if getattr(self, "_boundary_fn", None) is None:
@@ -214,31 +296,77 @@ class WindowedEngine(Engine):
         n_windows = 0
         wave_counts = []
         bstats = []
-        cur = self._schedule_ov(base_key, 0, min(self.window, total_tasks))
-        lv = self._levels0(cur[2], cur[1])
-        while t < total_tasks:
-            k = min(self.window, total_tasks - t)
-            if t + k < total_tasks:
-                # dispatch window k+1's schedule + boundary (cross block,
-                # carry frontier, floored levels) before blocking on the
-                # fused drain of window k — same double buffering as the
-                # barrier loop, now with the carry-over record check
-                nxt = self._schedule_ov(
-                    base_key, t + k, min(self.window, total_tasks - t - k))
-                lv_nxt, b = self._boundary_fn(cur[0], lv,
-                                              nxt[0], nxt[1], nxt[2])
-                bstats.append(b)
-                state, n_waves, lv_nxt = self._execute_pair(
-                    state, cur, lv, nxt, lv_nxt)
-                cur, lv = nxt, lv_nxt
-            else:
-                # last window: no partner — drain through the barrier
-                # executor (skips the empty-mask partner waves and, for
-                # the sharded engine, the doubled pair-halo gather)
-                state, n_waves = self._execute_drain(state, cur, lv)
-            wave_counts.append(n_waves)
-            n_windows += 1
-            t += k
+        run_cm = (tr.span("run", engine=self.name, window=self.window,
+                          total_tasks=total_tasks, overlap=True)
+                  if tr is not None else nullcontext())
+        with run_cm:
+            cur = self._dispatch_schedule(
+                tr, base_key, 0, min(self.window, total_tasks),
+                index=0, ov=True)
+            lv = self._levels0(cur[2], cur[1])
+            while t < total_tasks:
+                k = min(self.window, total_tasks - t)
+                if t + k < total_tasks:
+                    # dispatch window k+1's schedule + boundary (cross
+                    # block, carry frontier, floored levels) before
+                    # blocking on the fused drain of window k — same
+                    # double buffering as the barrier loop, now with the
+                    # carry-over record check
+                    nxt = self._dispatch_schedule(
+                        tr, base_key, t + k,
+                        min(self.window, total_tasks - t - k),
+                        index=n_windows + 1, ov=True)
+                    if tr is None:
+                        lv_nxt, b = self._boundary_fn(cur[0], lv,
+                                                      nxt[0], nxt[1], nxt[2])
+                    else:
+                        with tr.span("boundary", index=n_windows) as bsp:
+                            lv_nxt, b = self._boundary_fn(
+                                cur[0], lv, nxt[0], nxt[1], nxt[2])
+                            jax.block_until_ready((lv_nxt, b))
+                        bsp.args.update(
+                            overlap_depth=int(b[0]), early_tasks=int(b[1]),
+                            carry_mean=float(b[2]), carry_max=int(b[3]))
+                    bstats.append(b)
+                    if tr is None:
+                        state, n_waves, lv_nxt = self._execute_pair(
+                            state, cur, lv, nxt, lv_nxt)
+                    else:
+                        lv_pre = lv_nxt  # pre-rebase levels: wave widths
+                        with tr.span("execute", index=n_windows, start=t,
+                                     count=k, fused=True) as sp:
+                            state, n_waves, lv_nxt = self._execute_pair(
+                                state, cur, lv, nxt, lv_nxt)
+                            jax.block_until_ready(state)
+                            n_waves = int(n_waves)
+                        sp.args["n_waves"] = n_waves
+                        sp.args.update(self._trace_execute_args())
+                        self._trace_window(
+                            tr, sp, [self._trace_parts(cur, lv),
+                                     self._trace_parts(nxt, lv_pre)],
+                            n_waves)
+                    cur, lv = nxt, lv_nxt
+                else:
+                    # last window: no partner — drain through the barrier
+                    # executor (skips the empty-mask partner waves and,
+                    # for the sharded engine, the doubled pair-halo
+                    # gather)
+                    if tr is None:
+                        state, n_waves = self._execute_drain(state, cur, lv)
+                    else:
+                        with tr.span("execute", index=n_windows, start=t,
+                                     count=k, drain=True) as sp:
+                            state, n_waves = self._execute_drain(
+                                state, cur, lv)
+                            jax.block_until_ready(state)
+                            n_waves = int(n_waves)
+                        sp.args["n_waves"] = n_waves
+                        sp.args.update(self._trace_execute_args())
+                        self._trace_window(
+                            tr, sp, [self._trace_parts(cur, lv)], n_waves)
+                wave_counts.append(n_waves)
+                n_windows += 1
+                t += k
         total_waves = int(sum(int(w) for w in wave_counts))  # host sync here
         state = self._finalize_state(state)
         depths = [int(b[0]) for b in bstats]
@@ -260,7 +388,7 @@ class WindowedEngine(Engine):
                                     if cmeans else 0.0),
             "carry_frontier_max": max(cmaxs, default=0),
         }
-        return state, self._extend_stats(stats)
+        return state, finalize_stats(self._extend_stats(stats))
 
     def run(self, state: Any, total_tasks: int, *, seed: int = 0):
         if self.overlap:
@@ -272,24 +400,44 @@ class WindowedEngine(Engine):
                     f"engine {self.name!r} does not implement cross-window "
                     "overlap; use overlap=False (the barrier fallback)")
             return self._run_overlapped(state, total_tasks, seed=seed)
+        tr = current_tracer()
         base_key = jax.random.key(seed)
         state = self._prepare_state(state)
         t = 0
         n_windows = 0
         wave_counts = []
-        nxt = self._schedule(base_key, 0, min(self.window, total_tasks))
-        while t < total_tasks:
-            k = min(self.window, total_tasks - t)
-            cur = nxt
-            if t + k < total_tasks:
-                # double buffering: dispatch window t+1's schedule (conflict
-                # matrix + levels) before blocking on window t's execution
-                nxt = self._schedule(
-                    base_key, t + k, min(self.window, total_tasks - t - k))
-            state, n_waves = self._execute(state, cur)
-            wave_counts.append(n_waves)
-            n_windows += 1
-            t += k
+        run_cm = (tr.span("run", engine=self.name, window=self.window,
+                          total_tasks=total_tasks, overlap=False)
+                  if tr is not None else nullcontext())
+        with run_cm:
+            nxt = self._dispatch_schedule(
+                tr, base_key, 0, min(self.window, total_tasks), index=0)
+            while t < total_tasks:
+                k = min(self.window, total_tasks - t)
+                cur = nxt
+                if t + k < total_tasks:
+                    # double buffering: dispatch window t+1's schedule
+                    # (conflict matrix + levels) before blocking on window
+                    # t's execution
+                    nxt = self._dispatch_schedule(
+                        tr, base_key, t + k,
+                        min(self.window, total_tasks - t - k),
+                        index=n_windows + 1)
+                if tr is None:
+                    state, n_waves = self._execute(state, cur)
+                else:
+                    with tr.span("execute", index=n_windows, start=t,
+                                 count=k) as sp:
+                        state, n_waves = self._execute(state, cur)
+                        jax.block_until_ready(state)
+                        n_waves = int(n_waves)
+                    sp.args["n_waves"] = n_waves
+                    sp.args.update(self._trace_execute_args())
+                    self._trace_window(
+                        tr, sp, [self._trace_parts(cur)], n_waves)
+                wave_counts.append(n_waves)
+                n_windows += 1
+                t += k
         total_waves = int(sum(int(w) for w in wave_counts))  # host sync here
         state = self._finalize_state(state)
         stats = {
@@ -299,7 +447,7 @@ class WindowedEngine(Engine):
             "mean_parallelism": total_tasks / max(total_waves, 1),
             "overlap": False,
         }
-        return state, self._extend_stats(stats)
+        return state, finalize_stats(self._extend_stats(stats))
 
     def _extend_stats(self, stats: dict) -> dict:
         return stats

@@ -11,13 +11,17 @@ from typing import Any
 import jax
 
 from repro.engine.base import Engine, register_engine
+from repro.obs.stats import finalize_stats
+from repro.obs.trace import current_tracer
 
 
 def run_sequential(model, state, total_tasks: int, *, seed: int = 0,
                    window: int = 256):
     """Oracle runner: same task stream, strictly sequential execution."""
+    tr = current_tracer()
     base_key = jax.random.key(seed)
     t = 0
+    index = 0
     seq = jax.jit(
         lambda st, key, start, count: model.execute_sequential(
             st, model.create_tasks(key, start, window), count
@@ -25,8 +29,15 @@ def run_sequential(model, state, total_tasks: int, *, seed: int = 0,
     )
     while t < total_tasks:
         k = min(window, total_tasks - t)
-        state = seq(state, base_key, t, k)
+        if tr is None:
+            state = seq(state, base_key, t, k)
+        else:
+            with tr.span("execute", index=index, start=t, count=k,
+                         sequential=True):
+                state = seq(state, base_key, t, k)
+                jax.block_until_ready(state)
         t += k
+        index += 1
     return state
 
 
@@ -38,12 +49,19 @@ class SequentialEngine(Engine):
     name = "sequential"
 
     def run(self, state: Any, total_tasks: int, *, seed: int = 0):
-        state = run_sequential(self.model, state, total_tasks, seed=seed,
-                               window=self.window)
+        from contextlib import nullcontext
+
+        tr = current_tracer()
+        run_cm = (tr.span("run", engine=self.name, window=self.window,
+                          total_tasks=total_tasks, overlap=False)
+                  if tr is not None else nullcontext())
+        with run_cm:
+            state = run_sequential(self.model, state, total_tasks,
+                                   seed=seed, window=self.window)
         stats = {
             "total_tasks": total_tasks,
             "n_windows": -(-total_tasks // self.window) if total_tasks else 0,
             "total_waves": total_tasks,
             "mean_parallelism": 1.0,
         }
-        return state, stats
+        return state, finalize_stats(stats)

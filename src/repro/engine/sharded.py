@@ -99,6 +99,7 @@ from repro.distributed.sharding import (
     window_halo,
 )
 from repro.engine.base import WindowedEngine, register_engine
+from repro.obs.profiler import annotate
 from repro.utils.compat import shard_map
 
 
@@ -364,13 +365,16 @@ class ShardedEngine(WindowedEngine):
         chunk, n_waves_max = self.chunk, self.window
 
         def _exec_mono(state, recipes, levels, write_agents, halo):
-            return window_sharded(state, recipes, levels, write_agents, halo)
+            with annotate("protocol.execute_window"):
+                return window_sharded(state, recipes, levels, write_agents,
+                                      halo)
 
         def _exec_split(state, recipes, levels, write_agents, rows):
             slabs, chunk_start = wave_halo_split(
                 rows, levels, n_waves_max=n_waves_max, chunk=chunk)
-            state, n_waves = window_split_sharded(
-                state, recipes, levels, write_agents, slabs, chunk_start)
+            with annotate("protocol.execute_window"):
+                state, n_waves = window_split_sharded(
+                    state, recipes, levels, write_agents, slabs, chunk_start)
             # rows actually gathered this window (every executed wave's
             # chunk range) — the comm ledger entry for the stats
             shipped = chunk_start[n_waves] * chunk
@@ -378,8 +382,9 @@ class ShardedEngine(WindowedEngine):
 
         def _exec_pair_mono(state, rec_a, lv_a, wa_a, rec_b, lv_b, wa_b,
                             halo):
-            state, n_waves = window_pair_sharded(
-                state, rec_a, lv_a, wa_a, rec_b, lv_b, wa_b, halo)
+            with annotate("protocol.execute_pair"):
+                state, n_waves = window_pair_sharded(
+                    state, rec_a, lv_a, wa_a, rec_b, lv_b, wa_b, halo)
             # rebase the next window onto the new level clock; executed
             # (and invalid) tasks drop to -1
             lv_b = jnp.where(lv_b >= n_waves, lv_b - n_waves, -1)
@@ -394,9 +399,10 @@ class ShardedEngine(WindowedEngine):
             lvs = jnp.concatenate([lv_a, lv_b])
             slabs, chunk_start = wave_halo_split(
                 rows, lvs, n_waves_max=n_waves_max, chunk=chunk)
-            state, n_waves = window_pair_split_sharded(
-                state, rec_a, lv_a, wa_a, rec_b, lv_b, wa_b,
-                slabs, chunk_start)
+            with annotate("protocol.execute_pair"):
+                state, n_waves = window_pair_split_sharded(
+                    state, rec_a, lv_a, wa_a, rec_b, lv_b, wa_b,
+                    slabs, chunk_start)
             lv_b = jnp.where(lv_b >= n_waves, lv_b - n_waves, -1)
             shipped = chunk_start[n_waves] * chunk
             return state, n_waves, lv_b, shipped
@@ -453,6 +459,10 @@ class ShardedEngine(WindowedEngine):
         self._execute_pair = _execute_pair
         self._execute_drain = _execute_drain
         self._n_agents, self._n_pad = n_agents, n_pad
+        # layout facts the tracer's per-wave comm attribution reads
+        # (repro/obs — only touched when a tracer is installed)
+        self._shard_n = shard_n
+        self._halo_width = halo_width
         # the monolithic per-wave reference the split is measured against
         # (the mode that dominates the run: pair width for overlapped
         # runs — the final drain ships the single-window halo, slightly
@@ -533,6 +543,65 @@ class ShardedEngine(WindowedEngine):
             stats["window_halo_bytes"] = None
             stats["comm_reduction_vs_window_halo"] = None
         return stats
+
+    # ------------------------------------------------------------ tracing
+    # Reached only with a tracer installed (repro.obs) — the comm ledger
+    # entry appended by the window's executor names the rung, and the
+    # schedule's replicated level/row/write-target arrays reproduce the
+    # per-wave shipped volume host-side (the split math below mirrors
+    # ``wave_halo_split``: valid row slots per wave, ceil'd to chunks).
+
+    _RUNG_NAMES = {"split": "split", "halo": "window_halo",
+                   "pair": "pair_halo", "full": "full_state"}
+
+    def _trace_parts(self, sched, levels=None):
+        if levels is None:
+            _, lv, wa, _, rows = sched          # barrier schedule
+        else:
+            lv = levels                          # overlapped: re-leveled
+            wa, _, rows = sched[3]
+        return lv, wa, rows
+
+    def _trace_execute_args(self):
+        if not self._win_comm:
+            return {}
+        kind, _, _ = self._win_comm[-1]
+        return {"rung": self._RUNG_NAMES[kind], "n_devices": self.n_devices}
+
+    def _trace_wave_comm(self, np_parts, n_waves):
+        import numpy as np
+
+        if not self._win_comm:
+            return None
+        kind = self._win_comm[-1][0]
+        rung = self._RUNG_NAMES[kind]
+        if kind == "split":
+            per_wave = np.zeros(n_waves, np.int64)
+            for lv, _, rows in np_parts:
+                if rows is None:
+                    continue
+                ok = (lv >= 0) & (lv < n_waves)
+                np.add.at(per_wave, lv[ok], (rows[ok] >= 0).sum(axis=1))
+            per_wave = -(-per_wave // self.chunk) * self.chunk
+        else:
+            width = {"halo": self._halo_width,
+                     "pair": 2 * self._halo_width,
+                     "full": self._n_pad}[kind]
+            per_wave = np.full(n_waves, width, np.int64)
+        # per-device owned-task counts (a task runs on every device whose
+        # row block holds one of its write targets) -> load imbalance
+        owned = np.zeros((n_waves, self.n_devices), np.int64)
+        for lv, wa, _ in np_parts:
+            if wa is None:
+                continue
+            dev = np.where(wa >= 0, wa // self._shard_n, -1)
+            for i in np.nonzero((lv >= 0) & (lv < n_waves))[0]:
+                devs = np.unique(dev[i])
+                owned[lv[i], devs[devs >= 0]] += 1
+        rb = self._row_bytes
+        return [{"rung": rung, "rows": int(r), "bytes": int(r) * rb,
+                 "owned": owned[w].tolist()}
+                for w, r in enumerate(per_wave)]
 
 
 @register_engine

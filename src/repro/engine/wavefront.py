@@ -70,8 +70,11 @@ class WavefrontEngine(WindowedEngine):
                 st = model.execute_wave(st, rec_b, lv_b == w)
                 return w + 1, st
 
-            _, state = jax.lax.while_loop(
-                lambda c: c[0] < n_waves, body, (jnp.int32(0), state))
+            from repro.obs.profiler import annotate
+
+            with annotate("protocol.execute_pair"):
+                _, state = jax.lax.while_loop(
+                    lambda c: c[0] < n_waves, body, (jnp.int32(0), state))
             # rebase the next window onto the new level clock; executed
             # (and invalid) tasks drop to -1
             lv_b = jnp.where(lv_b >= n_waves, lv_b - n_waves, -1)
@@ -85,6 +88,13 @@ class WavefrontEngine(WindowedEngine):
         # empty-mask partner waves are executed
         self._execute_drain = lambda state, cur, lv: self._execute(
             state, (cur[0], cur[1], lv))
+
+    def _trace_parts(self, sched, levels=None):
+        # barrier schedule carries its levels in slot 2; the overlapped
+        # loop re-levels and passes them explicitly. Single device: no
+        # write-owner or halo-row attributes.
+        lv = sched[2] if levels is None else levels
+        return lv, None, None
 
 
 @register_engine

@@ -19,6 +19,7 @@ from repro.kernels.conflict.conflict import (
     conflict_block_pallas,
     conflict_matrix_pallas,
 )
+from repro.obs.profiler import annotate
 
 
 @functools.partial(jax.jit, static_argnames=("strict",))
@@ -53,12 +54,14 @@ def conflict_matrix(read_ids, write_ids, valid, *, strict: bool = True,
     valid = jnp.asarray(valid, bool)
     if backend is None:
         backend = "pallas" if ON_TPU else "jnp"
-    if backend == "jnp":
-        return conflict_matrix_jnp(read_ids, write_ids, valid, strict=strict)
-    if backend == "pallas":
-        out = conflict_matrix_pallas(read_ids, write_ids, valid,
-                                     strict=strict, interpret=interpret)
-        return out.astype(bool)
+    with annotate("protocol.conflict_matrix"):
+        if backend == "jnp":
+            return conflict_matrix_jnp(read_ids, write_ids, valid,
+                                       strict=strict)
+        if backend == "pallas":
+            out = conflict_matrix_pallas(read_ids, write_ids, valid,
+                                         strict=strict, interpret=interpret)
+            return out.astype(bool)
     raise ValueError(f"unknown conflict backend {backend!r}")
 
 
@@ -99,12 +102,13 @@ def conflict_block(reads_i, writes_i, reads_j, writes_j, valid_i, valid_j,
     valid_j = jnp.asarray(valid_j, bool)
     if backend is None:
         backend = "pallas" if ON_TPU else "jnp"
-    if backend == "jnp":
-        return conflict_block_jnp(reads_i, writes_i, reads_j, writes_j,
-                                  valid_i, valid_j, strict=strict)
-    if backend == "pallas":
-        out = conflict_block_pallas(reads_i, writes_i, reads_j, writes_j,
-                                    valid_i, valid_j, strict=strict,
-                                    interpret=interpret)
-        return out.astype(bool)
+    with annotate("protocol.conflict_block"):
+        if backend == "jnp":
+            return conflict_block_jnp(reads_i, writes_i, reads_j, writes_j,
+                                      valid_i, valid_j, strict=strict)
+        if backend == "pallas":
+            out = conflict_block_pallas(reads_i, writes_i, reads_j, writes_j,
+                                        valid_i, valid_j, strict=strict,
+                                        interpret=interpret)
+            return out.astype(bool)
     raise ValueError(f"unknown conflict backend {backend!r}")

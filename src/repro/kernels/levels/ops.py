@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from repro.kernels import ON_TPU
 from repro.kernels.levels.levels import wave_levels_pallas
 from repro.kernels.levels.ref import wave_levels_ref
+from repro.obs.profiler import annotate
 
 
 def wave_levels(conflicts, valid, *, base=None, backend: str | None = None,
@@ -42,9 +43,10 @@ def wave_levels(conflicts, valid, *, base=None, backend: str | None = None,
         base = jnp.asarray(base, jnp.int32)
     if backend is None:
         backend = "pallas" if ON_TPU else "jnp"
-    if backend == "jnp":
-        return wave_levels_ref(conflicts, valid, base)
-    if backend == "pallas":
-        return wave_levels_pallas(conflicts, valid, base,
-                                  interpret=interpret)
+    with annotate("protocol.wave_levels"):
+        if backend == "jnp":
+            return wave_levels_ref(conflicts, valid, base)
+        if backend == "pallas":
+            return wave_levels_pallas(conflicts, valid, base,
+                                      interpret=interpret)
     raise ValueError(f"unknown levels backend {backend!r}")

@@ -1,0 +1,53 @@
+"""Observability subsystem: protocol tracing, metrics and reports.
+
+The paper's central claim — adaptive, graceful handling of heterogeneous
+computation — is only testable if the protocol can be *measured from the
+inside*. This package is that layer:
+
+  trace.py      — structured span tracer: per-window, per-wave and
+                  per-boundary events (wave width, level, halo rows/bytes
+                  per comm-ladder rung, overlap depth, schedule-vs-execute
+                  split), exported as Chrome trace-event JSON (Perfetto-
+                  loadable). Off by default; the engines' hot path adds
+                  **zero** host syncs when no tracer is installed.
+  stats.py      — typed, versioned stats registry: every engine stat is
+                  declared once (type, group, docstring); engine ``run``
+                  stats are validated against it and normalized to
+                  host-native Python scalars at the registry boundary.
+  profiler.py   — device-profile integration: ``jax.profiler.trace``
+                  context helper plus the ``annotate`` named-scope alias
+                  used to label protocol phases (levels/conflict kernels,
+                  halo gathers, window executors) in device profiles.
+  provenance.py — environment header (jax version, backend, device kind
+                  and count, timestamp, git sha) stamped into the
+                  benchmark artifacts.
+
+See docs/observability.md for the span taxonomy and report walkthrough.
+"""
+from repro.obs.provenance import provenance
+from repro.obs.stats import (
+    STATS_VERSION,
+    StatSpec,
+    finalize_stats,
+    registry,
+    row_keys,
+)
+from repro.obs.trace import (
+    SpanTracer,
+    current_tracer,
+    tracing,
+    validate_chrome_trace,
+)
+
+__all__ = [
+    "SpanTracer",
+    "current_tracer",
+    "tracing",
+    "validate_chrome_trace",
+    "StatSpec",
+    "STATS_VERSION",
+    "finalize_stats",
+    "registry",
+    "row_keys",
+    "provenance",
+]

@@ -1,0 +1,47 @@
+"""Provenance headers for benchmark artifacts.
+
+A BENCH JSON without its environment is unreproducible: CPU fallback vs
+TPU, virtual vs real devices, and the code revision all change what the
+numbers mean. ``provenance()`` captures the environment once and both
+sweeps stamp it into their ``meta`` block; ``benchmarks/report.py mabs``
+renders it above the tables.
+"""
+from __future__ import annotations
+
+import datetime
+import os
+import subprocess
+
+from repro.obs.stats import STATS_VERSION
+
+
+def _git_sha() -> str | None:
+    """Short sha of the repo this package lives in; None outside git."""
+    root = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))))
+    try:
+        p = subprocess.run(
+            ["git", "-C", root, "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10)
+        return p.stdout.strip() or None if p.returncode == 0 else None
+    except (OSError, subprocess.SubprocessError):
+        return None
+
+
+def provenance() -> dict:
+    """Environment header for a benchmark artifact: jax version, backend
+    and device kind/count, UTC timestamp, git sha, stats schema version.
+    Values are host-native JSON scalars."""
+    import jax
+
+    dev = jax.devices()[0]
+    return {
+        "jax_version": str(jax.__version__),
+        "backend": str(jax.default_backend()),
+        "device_kind": str(getattr(dev, "device_kind", "unknown")),
+        "device_count": int(jax.device_count()),
+        "timestamp": datetime.datetime.now(datetime.timezone.utc)
+                     .isoformat(timespec="seconds"),
+        "git_sha": _git_sha(),
+        "stats_version": STATS_VERSION,
+    }

@@ -1,0 +1,171 @@
+"""Typed, versioned engine-stats registry.
+
+Every statistic an engine may emit from ``run`` is declared here exactly
+once — key, type, group, nullability and a one-line meaning. The
+registry replaces the former ``_extend_stats`` dict soup in three ways:
+
+  * **Validation.** ``finalize_stats`` (called by every engine on its
+    way out of ``run``) rejects undeclared keys, so a stat cannot be
+    added without declaring its type and meaning here.
+  * **Normalization.** Engine loops accumulate 0-d device arrays and
+    numpy scalars; ``finalize_stats`` converts every value to a
+    host-native Python scalar (int/float/bool/str, or a str->int dict)
+    at the registry boundary, so BENCH JSON rows and test assertions
+    never see device types.
+  * **Schema derivation.** ``row_keys(group, ...)`` returns the declared
+    keys of the given groups in declaration order —
+    ``benchmarks/engine_sweep.py`` derives its nullable row columns from
+    it instead of hand-listing them.
+
+``STATS_VERSION`` is bumped whenever a key is added, removed or changes
+meaning; the benchmark provenance header records it so old BENCH JSONs
+stay interpretable.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Mapping
+
+#: bump on any change to the declared keys or their meaning
+STATS_VERSION = 1
+
+#: declaration groups, in rendering order
+GROUPS = ("core", "device", "comm", "overlap")
+
+
+@dataclass(frozen=True)
+class StatSpec:
+    key: str
+    kind: str          # "int" | "float" | "bool" | "mapping"
+    group: str         # one of GROUPS
+    description: str
+    nullable: bool = False
+
+    def normalize(self, value: Any) -> Any:
+        """Coerce one stat value to its declared host-native type."""
+        if value is None:
+            if self.nullable:
+                return None
+            raise ValueError(f"stat {self.key!r} is not nullable")
+        if self.kind == "int":
+            return int(value)
+        if self.kind == "float":
+            return float(value)
+        if self.kind == "bool":
+            return bool(value)
+        if self.kind == "mapping":
+            if not isinstance(value, Mapping):
+                raise ValueError(
+                    f"stat {self.key!r} expects a mapping, got "
+                    f"{type(value).__name__}")
+            return {str(k): int(v) for k, v in value.items()}
+        raise ValueError(f"unknown stat kind {self.kind!r}")  # pragma: no cover
+
+
+_REGISTRY: dict[str, StatSpec] = {}
+
+
+def declare(key: str, kind: str, group: str, description: str, *,
+            nullable: bool = False) -> StatSpec:
+    assert group in GROUPS, group
+    assert key not in _REGISTRY, f"stat {key!r} declared twice"
+    spec = StatSpec(key, kind, group, description, nullable)
+    _REGISTRY[key] = spec
+    return spec
+
+
+def registry() -> Mapping[str, StatSpec]:
+    """The full declaration table (read-only view by convention)."""
+    return _REGISTRY
+
+
+def row_keys(*groups: str) -> tuple[str, ...]:
+    """Declared keys of the given groups (all groups when empty), in
+    declaration order — the derived row schema for the benchmark sweeps."""
+    want = groups or GROUPS
+    for g in want:
+        assert g in GROUPS, g
+    return tuple(s.key for s in _REGISTRY.values() if s.group in want)
+
+
+def finalize_stats(stats: dict, *, strict: bool = True) -> dict:
+    """Validate + normalize one engine ``run`` stats dict at the registry
+    boundary: every key must be declared (unless ``strict=False``), and
+    every value is converted to its declared host-native Python type —
+    no 0-d device arrays or numpy scalars leak past this point."""
+    out: dict = {}
+    for key, value in stats.items():
+        spec = _REGISTRY.get(key)
+        if spec is None:
+            if strict:
+                raise ValueError(
+                    f"undeclared engine stat {key!r} — declare it in "
+                    f"repro/obs/stats.py (and bump STATS_VERSION)")
+            out[key] = value
+            continue
+        out[key] = spec.normalize(value)
+    return out
+
+
+# --------------------------------------------------------------------------
+# the declarations (docs/observability.md renders this table)
+
+# core — every engine
+declare("total_tasks", "int", "core", "tasks executed from the chain")
+declare("n_windows", "int", "core", "windows the chain was cut into")
+declare("total_waves", "int", "core",
+        "executed (fused) waves over the whole run")
+declare("mean_parallelism", "float", "core",
+        "total_tasks / total_waves — mean tasks per wave")
+
+# device — sharded engines
+declare("n_devices", "int", "device", "mesh size over the agent axis")
+
+# comm — sharded engines (all byte counts are per-device receive volume)
+declare("halo", "bool", "comm", "some window used a halo layout "
+        "(split, window or pair halo)", nullable=True)
+declare("halo_split", "bool", "comm",
+        "some window used the per-wave split rung", nullable=True)
+declare("comm_modes", "mapping", "comm",
+        "executed windows per comm-ladder rung, e.g. {'split': 5}",
+        nullable=True)
+declare("per_wave_gather_rows", "int", "comm",
+        "mean rows shipped per executed wave", nullable=True)
+declare("per_wave_comm_bytes", "int", "comm",
+        "mean bytes shipped per executed wave", nullable=True)
+declare("per_wave_split_rows", "float", "comm",
+        "mean split-slab rows per wave (None when the split didn't run)",
+        nullable=True)
+declare("window_halo_rows", "int", "comm",
+        "monolithic window/pair-halo reference rows per wave "
+        "(padded N where that rung would replicate)", nullable=True)
+declare("window_halo_bytes", "int", "comm",
+        "the same reference in bytes", nullable=True)
+declare("comm_reduction_vs_window_halo", "float", "comm",
+        "window_halo_bytes / per_wave_comm_bytes — the split's win "
+        "(1.0 on the monolithic rung)", nullable=True)
+declare("full_state_bytes", "int", "comm",
+        "replicated all_gather baseline bytes per wave", nullable=True)
+declare("comm_bytes_total", "int", "comm",
+        "rows actually shipped over the whole run, in bytes",
+        nullable=True)
+
+# overlap — windowed engines (the cross-window carry-over accounting)
+declare("overlap", "bool", "overlap",
+        "the overlapped (fused-boundary) loop actually ran",
+        nullable=True)
+declare("n_boundaries", "int", "overlap",
+        "window transitions checked (n_windows - 1)", nullable=True)
+declare("mean_overlap_depth", "float", "overlap",
+        "mean tail waves of window k that also ran window k+1 tasks",
+        nullable=True)
+declare("max_overlap_depth", "int", "overlap",
+        "max of the same over boundaries", nullable=True)
+declare("overlap_tasks_early", "int", "overlap",
+        "tasks executed before their window's barrier would have opened",
+        nullable=True)
+declare("carry_frontier_mean", "float", "overlap",
+        "mean carry floor over next-window tasks (0 = independent head)",
+        nullable=True)
+declare("carry_frontier_max", "int", "overlap",
+        "largest carry floor seen", nullable=True)

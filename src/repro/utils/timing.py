@@ -16,16 +16,47 @@ class Timer:
         self.elapsed = time.perf_counter() - self.t0
 
 
-def median_time(fn: Callable[[], object], repeats: int = 5, warmup: int = 2) -> float:
-    """Median wall time of fn() in seconds; blocks on JAX async dispatch."""
+def block_all(out):
+    """Fence JAX async dispatch on *every* array leaf of ``out``.
+
+    ``jax.block_until_ready`` already traverses pytrees, but the timing
+    helpers fence leaf-by-leaf explicitly so a timed function returning a
+    tuple/dict of arrays can never under-fence (a single un-awaited leaf
+    would let queued device work leak out of the timed region and into
+    the next repeat). Non-array leaves pass through untouched. Returns
+    ``out``.
+    """
+    for leaf in jax.tree_util.tree_leaves(out):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+    return out
+
+
+def median_time(fn: Callable[[], object], repeats: int = 5,
+                warmup: int = 2) -> float:
+    """Median wall time of ``fn()`` in seconds, fenced per repeat.
+
+    Warmup policy: ``warmup`` untimed calls run first and are fully
+    fenced (``block_all`` on their outputs). The default of 2 covers the
+    two cold effects a timed repeat must not pay: the first call traces
+    and compiles; the second hits the compile cache and warms any
+    dispatch-level caches (donated-buffer reuse, transfer plans). Fencing
+    the warmup outputs also guarantees no queued device work crosses
+    into the first timed repeat. Callers that warm up separately (e.g.
+    the engine sweep, which needs the warmup run's stats) pass
+    ``warmup=0`` — they own the fence then.
+
+    Each timed repeat is fenced on every output leaf, so the measured
+    span is real host+device wall time for the whole output pytree, not
+    async-dispatch time of whichever leaf ``block_until_ready`` saw
+    first fail to be an array.
+    """
     for _ in range(warmup):
-        out = fn()
-        jax.block_until_ready(out)
+        block_all(fn())
     times = []
     for _ in range(repeats):
         t0 = time.perf_counter()
-        out = fn()
-        jax.block_until_ready(out)
+        block_all(fn())
         times.append(time.perf_counter() - t0)
     times.sort()
     return times[len(times) // 2]

@@ -1,0 +1,313 @@
+"""Observability subsystem tests (repro.obs).
+
+Pins the three contracts docs/observability.md promises:
+
+  * tracing is OFF by default — no tracer installed, no events recorded,
+    and engine stats come back as host-native Python scalars either way;
+  * tracing ON does not perturb the protocol — every registry engine
+    stays bit-exact vs the sequential oracle with a tracer installed,
+    and the export passes the Chrome trace-event schema validator
+    (matched B/E spans, monotone timestamps, known phases);
+  * the stats registry is the single schema authority — undeclared keys
+    are rejected at the ``finalize_stats`` boundary, declared ones are
+    normalized to their declared host types.
+
+The 8-device sharded lane reuses the subprocess pattern of
+test_engine_differential.py (the main process keeps its default single
+device); it drives benchmarks/trace_smoke.py — the same script the CI
+trace-export smoke step runs.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+
+from conftest import BASE_SEED
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _voter(n=48, k=4):
+    from repro.mabs.voter import VoterModel
+    from repro.topology import ring
+
+    return VoterModel(ring(n, k))
+
+
+# --------------------------------------------------------------------------
+# stats registry
+
+
+def test_stats_registry_declarations():
+    from repro.obs import STATS_VERSION, registry, row_keys
+    from repro.obs.stats import GROUPS
+
+    reg = registry()
+    assert isinstance(STATS_VERSION, int) and STATS_VERSION >= 1
+    assert reg, "registry must not be empty"
+    for key, spec in reg.items():
+        assert spec.key == key
+        assert spec.group in GROUPS
+        assert spec.kind in ("int", "float", "bool", "mapping")
+        assert spec.description
+    # the core quartet every engine emits
+    for key in ("total_tasks", "n_windows", "total_waves",
+                "mean_parallelism"):
+        assert key in reg and not reg[key].nullable
+    # row_keys: declaration order, group-filtered, all-groups default
+    assert set(row_keys("comm")) == {k for k, s in reg.items()
+                                     if s.group == "comm"}
+    assert row_keys() == tuple(reg)
+    both = row_keys("comm", "overlap")
+    assert "per_wave_comm_bytes" in both and "mean_overlap_depth" in both
+    assert "total_tasks" not in both
+
+
+def test_finalize_stats_normalizes_and_rejects():
+    import numpy as np
+
+    from repro.obs import finalize_stats
+
+    out = finalize_stats({
+        "total_tasks": np.int64(7),
+        "mean_parallelism": np.float32(1.5),
+        "halo": np.bool_(True),
+        "comm_modes": {"split": np.int32(3)},
+        "per_wave_split_rows": None,       # nullable
+    })
+    assert out["total_tasks"] == 7 and type(out["total_tasks"]) is int
+    assert out["mean_parallelism"] == 1.5
+    assert type(out["mean_parallelism"]) is float
+    assert out["halo"] is True
+    assert out["comm_modes"] == {"split": 3}
+    assert type(out["comm_modes"]["split"]) is int
+    assert out["per_wave_split_rows"] is None
+    with pytest.raises(ValueError, match="undeclared"):
+        finalize_stats({"no_such_stat": 1})
+    # non-strict: unknown keys pass through (ad-hoc analysis dicts)
+    assert finalize_stats({"no_such_stat": 1}, strict=False) == {
+        "no_such_stat": 1}
+    with pytest.raises(ValueError, match="not nullable"):
+        finalize_stats({"total_tasks": None})
+
+
+def test_engine_stats_are_host_native():
+    """Every engine's run stats pass the registry boundary as Python
+    scalars — no 0-d arrays or numpy types leak to callers."""
+    from repro.engine import make_engine
+
+    m = _voter()
+    st0 = m.init_state(jax.random.key(BASE_SEED + 1))
+    for ename in ("sequential", "wavefront", "wavefront_overlap"):
+        _, stats = make_engine(ename, m, window=16).run(
+            st0, 40, seed=BASE_SEED + 2)
+        for k, v in stats.items():
+            assert v is None or type(v) in (int, float, bool, dict), (
+                f"{ename}: stat {k!r} leaked {type(v).__name__}")
+
+
+# --------------------------------------------------------------------------
+# tracer core
+
+
+def test_tracing_off_by_default():
+    from repro.obs import current_tracer, tracing
+
+    assert current_tracer() is None
+    with tracing() as tr:
+        assert current_tracer() is tr
+        with tracing() as inner:     # blocks nest, inner wins
+            assert current_tracer() is inner
+        assert current_tracer() is tr
+    assert current_tracer() is None
+
+
+def test_span_tracer_subdivide_and_export(tmp_path):
+    from repro.obs import SpanTracer, validate_chrome_trace
+
+    tr = SpanTracer()
+    with tr.span("run", engine="test") as run:
+        with tr.span("execute", index=0) as sp:
+            pass
+        sp.args["n_waves"] = 2          # args mutable after exit
+        slots = tr.subdivide(sp, "wave", [3, 1],
+                             [{"level": 0}, {"level": 1}])
+    assert run.t1 is not None
+    assert len(slots) == 2
+    # width-proportional attribution covers the parent span exactly
+    assert slots[0][0] == pytest.approx(sp.t0)
+    assert slots[0][1] == pytest.approx(3 * slots[1][1])
+    assert slots[1][0] + slots[1][1] == pytest.approx(sp.t1)
+    path = tmp_path / "t.json"
+    payload = tr.export(str(path))
+    assert validate_chrome_trace(payload) == len(payload["traceEvents"])
+    on_disk = json.loads(path.read_text())
+    assert validate_chrome_trace(on_disk)
+    waves = [e for e in on_disk["traceEvents"] if e["name"] == "wave"]
+    assert [w["args"]["level"] for w in waves] == [0, 1]
+    assert all(w["args"]["attributed"] for w in waves)
+    execs = [e for e in on_disk["traceEvents"]
+             if e["name"] == "execute" and e["ph"] == "B"]
+    assert execs[0]["args"]["n_waves"] == 2
+
+
+def test_validator_rejects_malformed():
+    from repro.obs import validate_chrome_trace
+
+    ok = {"name": "a", "ph": "B", "ts": 1.0, "pid": 1, "tid": 0}
+    end = {"name": "a", "ph": "E", "ts": 2.0, "pid": 1, "tid": 0}
+    assert validate_chrome_trace([ok, end]) == 2
+    with pytest.raises(ValueError, match="traceEvents"):
+        validate_chrome_trace({})
+    with pytest.raises(ValueError, match="missing"):
+        validate_chrome_trace([{"ph": "B", "ts": 0, "pid": 1, "tid": 0}])
+    with pytest.raises(ValueError, match="unknown.*phase"):
+        validate_chrome_trace([dict(ok, ph="Q")])
+    with pytest.raises(ValueError, match="bad ts"):
+        validate_chrome_trace([dict(ok, ts=-1.0)])
+    with pytest.raises(ValueError, match="bad.*dur"):
+        validate_chrome_trace([dict(ok, ph="X")])
+    with pytest.raises(ValueError, match="unclosed"):
+        validate_chrome_trace([ok])
+    with pytest.raises(ValueError, match="without open B"):
+        validate_chrome_trace([end])
+    with pytest.raises(ValueError, match="cross-nested"):
+        validate_chrome_trace([
+            ok, {"name": "b", "ph": "B", "ts": 1.5, "pid": 1, "tid": 0},
+            end, {"name": "b", "ph": "E", "ts": 2.5, "pid": 1, "tid": 0}])
+
+
+# --------------------------------------------------------------------------
+# traced engines: bit-exactness + taxonomy (single device in-process)
+
+
+@pytest.mark.parametrize("ename", ["sequential", "wavefront",
+                                   "wavefront_overlap"])
+def test_traced_run_bit_exact_and_valid(ename):
+    import jax.numpy as jnp
+
+    from repro.core import ProtocolConfig, run_oracle
+    from repro.engine import make_engine
+    from repro.obs import tracing, validate_chrome_trace
+
+    m = _voter()
+    st0 = m.init_state(jax.random.key(BASE_SEED + 1))
+    cfg = ProtocolConfig(window=16, strict=True)
+    oracle = run_oracle(m, st0, 40, seed=BASE_SEED + 2, config=cfg)
+    eng = make_engine(ename, m, window=16, strict=True)
+    plain_out, plain_stats = eng.run(st0, 40, seed=BASE_SEED + 2)
+    with tracing() as tr:
+        out, stats = eng.run(st0, 40, seed=BASE_SEED + 2)
+    for a, b in zip(jax.tree_util.tree_leaves(out),
+                    jax.tree_util.tree_leaves(oracle)):
+        assert bool(jnp.all(a == b)), f"{ename} diverged under tracing"
+    assert stats == plain_stats, f"{ename}: tracing changed the stats"
+    payload = tr.export()
+    validate_chrome_trace(payload)
+    names = {e["name"] for e in payload["traceEvents"]}
+    assert {"run", "execute"} <= names
+    if ename != "sequential":
+        assert {"schedule", "wave"} <= names
+    if ename.endswith("_overlap"):
+        assert "boundary" in names
+    # untraced runs record nothing: the tracer we never installed for
+    # plain_out doesn't exist; a fresh run outside tracing() adds no
+    # events to the old tracer either
+    n = len(tr.events())
+    eng.run(st0, 40, seed=BASE_SEED + 2)
+    assert len(tr.events()) == n
+
+
+def test_trace_wave_widths_match_schedule():
+    """Wave spans carry the schedule's real widths: they sum to the
+    task total, and each window's widths sum to its task count."""
+    from repro.engine import make_engine
+    from repro.obs import tracing
+
+    m = _voter()
+    st0 = m.init_state(jax.random.key(BASE_SEED + 1))
+    eng = make_engine("wavefront", m, window=16)
+    with tracing() as tr:
+        _, stats = eng.run(st0, 40, seed=BASE_SEED + 2)
+    waves = [e for e in tr.events() if e["name"] == "wave"]
+    assert len(waves) == stats["total_waves"]
+    assert sum(e["args"]["width"] for e in waves) == stats["total_tasks"]
+
+
+# --------------------------------------------------------------------------
+# 8-device sharded lane: the CI smoke script, bit-exactness included
+
+
+def run_py(argv, timeout=560):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    p = subprocess.run([sys.executable, *argv], capture_output=True,
+                       text=True, timeout=timeout, env=env, cwd=REPO)
+    assert p.returncode == 0, p.stderr[-4000:]
+    return p.stdout
+
+
+def test_trace_smoke_sharded_8dev(tmp_path):
+    """The CI trace-export path end to end: traced sharded-overlap run,
+    bit-exact assert, schema-valid export with comm spans, and both
+    report subcommands rendering from the artifact."""
+    trace = tmp_path / "trace.json"
+    out = run_py([os.path.join(REPO, "benchmarks", "trace_smoke.py"),
+                  "--out", str(trace)])
+    assert "TRACE-OK" in out
+    payload = json.loads(trace.read_text())
+    from repro.obs import validate_chrome_trace
+
+    validate_chrome_trace(payload)
+    gathers = [e for e in payload["traceEvents"]
+               if e["name"] == "halo_gather"]
+    assert gathers, "sharded trace must carry halo_gather spans"
+    for e in gathers:
+        assert e["args"]["rung"] in ("split", "window_halo", "pair_halo",
+                                     "full_state")
+        assert e["args"]["rows"] > 0
+        assert e["args"]["bytes"] >= e["args"]["rows"]
+    owned = [e["args"]["owned"] for e in payload["traceEvents"]
+             if e["name"] == "wave" and "owned" in e["args"]]
+    assert owned and all(len(o) == 8 for o in owned), (
+        "wave spans must carry 8 per-device owned-task counts")
+    explain = run_py(["-m", "benchmarks.report", "explain", str(trace)])
+    assert "Wave-size histogram" in explain
+    assert "Comm ledger" in explain
+    assert "Per-device load (8 devices" in explain
+    timing = run_py(["-m", "benchmarks.report", "trace", str(trace)])
+    assert "Per-window split" in timing
+
+
+# --------------------------------------------------------------------------
+# satellites: timing fence, provenance
+
+
+def test_block_all_fences_every_leaf():
+    import jax.numpy as jnp
+
+    from repro.utils.timing import block_all, median_time
+
+    out = {"a": jnp.ones((4,)), "b": (jnp.zeros((2, 2)), 3, None)}
+    assert block_all(out) is out          # passthrough, non-arrays ok
+    t = median_time(lambda: {"x": jnp.arange(8) * 2, "n": 1},
+                    repeats=3, warmup=1)
+    assert t >= 0.0
+
+
+def test_provenance_header():
+    from repro.obs import STATS_VERSION, provenance
+
+    p = provenance()
+    assert p["jax_version"] == str(jax.__version__)
+    assert p["backend"] == jax.default_backend()
+    assert isinstance(p["device_count"], int) and p["device_count"] >= 1
+    assert isinstance(p["device_kind"], str)
+    assert "T" in p["timestamp"]          # ISO-8601
+    assert p["stats_version"] == STATS_VERSION
+    assert p["git_sha"] is None or isinstance(p["git_sha"], str)
+    json.dumps(p)                          # JSON-safe by construction
