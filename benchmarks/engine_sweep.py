@@ -117,12 +117,41 @@ def _tn_sweep(args) -> list[dict]:
                         "window": int(window),
                         "total_tasks": int(total),
                         "seconds": float(sec),
+                        "seconds_min": float(sec.samples[0]),
+                        "seconds_samples": list(sec.samples),
                         "tasks_per_s": float(total / sec),
                         "total_waves": int(stats["total_waves"]),
                         "mean_parallelism": float(stats["mean_parallelism"]),
                     })
                     print("ROW " + json.dumps(rows[-1]), flush=True)
     return rows
+
+
+def _compiled_cost_fields(eng, state, stats) -> dict:
+    """Compiled-cost telemetry for one engine row: AOT cost_analysis
+    FLOPs/bytes + memory decomposition of the window executor the run
+    dispatched, with the HLO-parsed collective bytes resolved against
+    the runtime comm ledger's executed iteration counts. The hlo/ledger
+    ratio (1.0 = exact) rides along as the in-artifact bug detector.
+    Overlapped runs dispatch the pair executors and mix per-iteration
+    widths across drain modes, so cost capture is barrier-mode only."""
+    # read the last timed run's comm ledger BEFORE compiled_costs — its
+    # _prepare_state call resets it (stats came from the warmup run, but
+    # every run executes the same schedule, so the counts agree)
+    iters = (eng.comm_iteration_counts(stats)
+             if hasattr(eng, "comm_iteration_counts") else None)
+    costs = eng.compiled_costs(state, seed=2)
+    if not costs:
+        return {}
+    (_, cost), = costs.items()
+    ledger_ratio = None
+    ledger = stats.get("comm_bytes_total")
+    # cross-check only on real meshes: a 1-device shard_map may elide
+    # its collectives entirely, which is not a comm-accounting bug
+    if iters is not None and ledger and getattr(eng, "n_devices", 1) > 1:
+        ledger_ratio = cost.collectives.total_bytes(iters) / ledger
+    return {"cost": cost.as_row(iters),
+            "coll_ledger_ratio": ledger_ratio}
 
 
 def _inner(args) -> None:
@@ -189,6 +218,8 @@ def _inner_body(args) -> None:
                     "total_waves": int(stats["total_waves"]),
                     "mean_parallelism": float(stats["mean_parallelism"]),
                     "seconds": float(sec),
+                    "seconds_min": float(sec.samples[0]),
+                    "seconds_samples": list(sec.samples),
                 }
                 # the nullable comm + overlap columns (per-wave rows/bytes
                 # shipped, the monolithic references, the carry-over
@@ -196,6 +227,7 @@ def _inner_body(args) -> None:
                 # declarations in repro/obs/stats.py own the row schema
                 row.update({k: stats.get(k)
                             for k in row_keys("comm", "overlap")})
+                row.update(_compiled_cost_fields(eng, state, stats))
                 rows.append(row)
                 print("ROW " + json.dumps(rows[-1]), flush=True)
     if args.tn_sweep:
@@ -266,6 +298,10 @@ def main():
     ap.add_argument("--run-inner", action="store_true", help=argparse.SUPPRESS)
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "..", "BENCH_engine.json"))
+    ap.add_argument("--no-ledger", dest="ledger", action="store_false",
+                    help="skip appending a benchmarks/ledger/ run record")
+    ap.add_argument("--ledger-dir", default=None, metavar="DIR",
+                    help="ledger directory (default benchmarks/ledger/)")
     args = ap.parse_args()
     if args.quick:
         args.n, args.windows, args.devices = 256, [64, 128], [1, 8]
@@ -343,6 +379,16 @@ def main():
     with open(out, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"wrote {out} ({len(rows)} rows)")
+    if args.ledger:
+        # the append-only history: BENCH_engine.json is overwritten per
+        # sweep, the ledger record is forever (report.py compare reads
+        # either)
+        try:
+            from benchmarks.ledger import append_record
+        except ImportError:  # run as a script: sys.path[0] is benchmarks/
+            from ledger import append_record
+
+        print(f"ledger record {append_record(payload, args.ledger_dir)}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,63 @@
+"""Append-only benchmark history ledger.
+
+``BENCH_engine.json`` is overwritten in place by every sweep, so the
+perf *trajectory* of the repo was untracked — a regression that lands
+together with a re-benchmark simply replaces the evidence. The ledger
+fixes that: every sweep appends one immutable run record under
+``benchmarks/ledger/``, named from the provenance header (UTC timestamp
++ git sha + backend), holding the same ``{"meta", "rows"}`` payload as
+the BENCH artifact. Records are never rewritten: ``append_record``
+refuses to overwrite, and ``report.py compare OLD NEW`` accepts any two
+records (or BENCH files — same schema) to produce thresholded per-row
+verdicts. CI's ``bench-regression`` job appends a record per run and
+gates on the comparison against the committed baseline.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+
+LEDGER_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "ledger")
+
+
+def record_name(meta: dict) -> str:
+    """Deterministic record filename from the provenance header:
+    ``<utc-timestamp>__<git-sha>__<backend>.json`` (filesystem-safe)."""
+    prov = (meta or {}).get("provenance") or {}
+    ts = re.sub(r"[^0-9TZ]", "", str(prov.get("timestamp", "unknown")))
+    sha = prov.get("git_sha") or "nogit"
+    backend = prov.get("backend") or meta.get("backend") or "unknown"
+    return f"{ts}__{sha}__{backend}.json"
+
+
+def append_record(payload: dict, ledger_dir: str | None = None) -> str:
+    """Append one run record; returns its path. Append-only by
+    construction: an existing record is never overwritten."""
+    d = ledger_dir or LEDGER_DIR
+    os.makedirs(d, exist_ok=True)
+    path = os.path.join(d, record_name(payload.get("meta", {})))
+    if os.path.exists(path):
+        raise FileExistsError(
+            f"ledger record {path} already exists — records are "
+            "append-only; re-run the sweep for a fresh provenance stamp")
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=2)
+    os.replace(tmp, path)
+    return path
+
+
+def list_records(ledger_dir: str | None = None) -> list[str]:
+    """Record paths in name (= timestamp) order, oldest first."""
+    d = ledger_dir or LEDGER_DIR
+    if not os.path.isdir(d):
+        return []
+    return [os.path.join(d, n) for n in sorted(os.listdir(d))
+            if n.endswith(".json")]
+
+
+def load_record(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)

@@ -16,6 +16,14 @@ Four report families share this entry point:
   * Trace timing summary — where the traced run's wall time went
     (schedule vs execute vs boundary, per-window table):
       PYTHONPATH=src python -m benchmarks.report trace TRACE.json
+  * Benchmark regression compare — thresholded per-row verdicts between
+    two BENCH_engine.json artifacts / ledger records (same schema);
+    ``--gate`` exits nonzero on a regression (CI's bench-regression job):
+      PYTHONPATH=src python -m benchmarks.report compare OLD NEW [--gate]
+
+``explain`` dispatches on content: a Chrome-trace payload renders the
+schedule shape (above); a BENCH_engine.json / ledger record renders the
+compiled-cost MABS roofline and the fitted T(W, n) cost model.
 
 Writes markdown to stdout (EXPERIMENTS.md / docs embed the output).
 """
@@ -301,6 +309,82 @@ def _trace_header(events):
 
 
 def explain_report(path):
+    """Content dispatch: a BENCH/ledger payload ({"meta", "rows"})
+    renders the compiled-cost roofline + T(W, n) fit; a Chrome-trace
+    payload renders the schedule's shape."""
+    with open(path) as f:
+        payload = json.load(f)
+    if isinstance(payload, dict) and "rows" in payload:
+        bench_explain(payload, path)
+        return
+    trace_explain(path)
+
+
+def bench_explain(bench, path):
+    """The static-cost half of explain: MABS roofline (compiled cost
+    bounds vs measured seconds per engine row) and the fitted T(W, n)
+    cost model with per-family residuals."""
+    from benchmarks.roofline import fit_tn_cost_model, mabs_roofline_rows
+
+    print(f"### Bench explain — {os.path.basename(path)}")
+    line = _provenance_line(bench.get("meta"))
+    if line:
+        print(f"\n*{line}*")
+
+    roof = mabs_roofline_rows(bench)
+    if roof:
+        backend = bench.get("meta", {}).get("backend", "cpu")
+        print(f"\n#### MABS roofline (compiled costs, {backend} peaks; "
+              "bound = max of the three terms)\n")
+        print("| model | engine | W | dev | executor | compute s "
+              "| memory s | collective s | dominant | bound s "
+              "| measured s | ×bound | hlo/ledger |")
+        print("|" + "---|" * 13)
+        for r in roof:
+            ratio = r.get("coll_ledger_ratio")
+            print(f"| {r['model']} | {r['engine']} | {r['window']} "
+                  f"| {r['n_devices']} | {r['executor']} "
+                  f"| {r['t_compute_s']:.2e} | {r['t_memory_s']:.2e} "
+                  f"| {r['t_collective_s']:.2e} | **{r['dominant']}** "
+                  f"| {r['bound_s']:.2e} | {r['measured_s']:.2e} "
+                  f"| {r['above_bound']:.1f}× "
+                  f"| {f'{ratio:.3f}' if ratio is not None else '—'} |")
+        bad = [r for r in roof if r.get("coll_ledger_ratio") is not None
+               and abs(r["coll_ledger_ratio"] - 1.0) > 1e-9]
+        print(f"\nhlo/ledger = HLO-parsed collective bytes / runtime comm "
+              f"ledger — {'ALL EXACT (1.000)' if not bad else f'{len(bad)} MISMATCHED rows (bug detector fired)'} "
+              f"on {sum(1 for r in roof if r.get('coll_ledger_ratio') is not None)} "
+              "cross-checked rows")
+    else:
+        print("\n(no engine rows with compiled-cost telemetry — rerun "
+              "benchmarks/engine_sweep.py to capture the `cost` field)")
+
+    tn_rows = [r for r in bench.get("rows", []) if r.get("kind") == "tn"]
+    if tn_rows:
+        fits = fit_tn_cost_model(tn_rows)
+        print("\n#### Fitted T(W, n) cost model "
+              "(per model, least squares over the tn sweep)\n")
+        print("| model | rows | c_sched [s/W²] | c_wave [s/wave] "
+              "| c_agent [s/(wave·n)] | c0 [s] | R² | rel RMS |")
+        print("|---|---|---|---|---|---|---|---|")
+        for f_ in fits:
+            c = f_["coef"]
+            print(f"| {f_['model']} | {f_['n_rows']} "
+                  f"| {c['c_sched[s/W^2]']:.3e} | {c['c_wave[s/wave]']:.3e} "
+                  f"| {c['c_agent[s/(wave*n)]']:.3e} | {c['c0[s]']:.3e} "
+                  f"| {f_['r2']:.3f} | {f_['rms_rel']:.3f} |")
+        print("\n| model | topology family | rows | residual rel RMS |")
+        print("|---|---|---|---|")
+        for f_ in fits:
+            for fam, res in f_["residuals_by_family"].items():
+                print(f"| {f_['model']} | {fam} | {res['n']} "
+                      f"| {res['rms_rel']:.3f} |")
+    else:
+        print("\n(no kind:\"tn\" rows — run the sweep without "
+              "--no-tn-sweep to fit the T(W, n) cost model)")
+
+
+def trace_explain(path):
     """Decode one protocol trace into the schedule's shape."""
     events = _load_trace(path)
     print(f"### Schedule explain — {os.path.basename(path)}")
@@ -440,7 +524,157 @@ def trace_report(path):
                   f"| {w['rung'] or '—'} |")
 
 
+# --------------------------------------------------------------------------
+# benchmark regression compare (BENCH artifacts / ledger records)
+
+#: row identity for the compare join — everything that pins a scenario
+COMPARE_KEY = ("kind", "model", "engine", "topology", "window",
+               "n_devices", "n_agents")
+
+#: default relative threshold on tasks/s before a row is verdicted
+COMPARE_THRESHOLD = 0.15
+
+
+def _row_key(r):
+    return tuple(r.get(k) for k in COMPARE_KEY)
+
+
+def _rel_spread(r):
+    """Dispersion of one row's timing repeats: (max-min)/median over
+    ``seconds_samples`` (0.0 when the row predates the samples column)."""
+    samples = r.get("seconds_samples") or []
+    med = r.get("seconds")
+    if len(samples) < 2 or not med:
+        return 0.0
+    return (max(samples) - min(samples)) / med
+
+
+def compare_benches(old: dict, new: dict,
+                    threshold: float = COMPARE_THRESHOLD) -> dict:
+    """Thresholded per-row verdicts between two bench payloads.
+
+    Joins rows on ``COMPARE_KEY`` and verdicts the ``tasks_per_s`` ratio
+    new/old: ``regressed`` below ``1 - t``, ``improved`` above ``1 + t``,
+    ``neutral`` between — where ``t`` is the *effective* threshold:
+    ``max(threshold, 2 × timing spread)`` of whichever side is noisier
+    (dispersion-aware — a noisy row needs a bigger move to be verdicted).
+    A provenance backend mismatch (cpu baseline vs tpu run, or vice
+    versa) makes the whole comparison ``warn_only``: verdicts still
+    render, but the gate never fails on them."""
+    def backend(b):
+        meta = b.get("meta", {})
+        return (meta.get("provenance") or {}).get("backend") \
+            or meta.get("backend")
+
+    warn_only = (backend(old) is not None and backend(new) is not None
+                 and backend(old) != backend(new))
+    old_rows = {_row_key(r): r for r in old.get("rows", [])}
+    results = []
+    for r in new.get("rows", []):
+        key = _row_key(r)
+        base = old_rows.pop(key, None)
+        if base is None:
+            results.append({"key": key, "verdict": "new",
+                            "ratio": None, "threshold": None})
+            continue
+        spread = max(_rel_spread(r), _rel_spread(base))
+        eff = max(threshold, 2.0 * spread)
+        o, n = base.get("tasks_per_s"), r.get("tasks_per_s")
+        if not o or not n:
+            verdict, ratio = "incomparable", None
+        else:
+            ratio = n / o
+            verdict = ("regressed" if ratio < 1.0 - eff
+                       else "improved" if ratio > 1.0 + eff
+                       else "neutral")
+        results.append({"key": key, "verdict": verdict, "ratio": ratio,
+                        "threshold": eff, "old": o, "new": n,
+                        "spread": spread})
+    counts: dict = {}
+    for r in results:
+        counts[r["verdict"]] = counts.get(r["verdict"], 0) + 1
+    return {
+        "warn_only": warn_only,
+        "old_backend": backend(old), "new_backend": backend(new),
+        "rows": results,
+        "counts": counts,
+        "unmatched_old": len(old_rows),
+        "regressed": [r for r in results if r["verdict"] == "regressed"],
+    }
+
+
+def compare_report(old_path: str, new_path: str,
+                   threshold: float = COMPARE_THRESHOLD,
+                   gate: bool = False) -> int:
+    """Render the compare as markdown; returns the process exit code
+    (nonzero only under ``--gate`` with a non-warn-only regression)."""
+    with open(old_path) as f:
+        old = json.load(f)
+    with open(new_path) as f:
+        new = json.load(f)
+    cmp = compare_benches(old, new, threshold)
+    print(f"### Bench compare — {os.path.basename(old_path)} → "
+          f"{os.path.basename(new_path)}")
+    for name, b in (("old", old), ("new", new)):
+        line = _provenance_line(b.get("meta"))
+        if line:
+            print(f"\n*{name}: {line}*")
+    if cmp["warn_only"]:
+        print(f"\n**backend mismatch ({cmp['old_backend']} → "
+              f"{cmp['new_backend']}): warn-only — verdicts are "
+              "informational, the gate will not fail**")
+    print(f"\nthreshold {threshold:.0%} relative on tasks/s, widened per "
+          "row to 2× its timing spread (seconds_samples)\n")
+    print("| kind | model | engine | topology | W | dev | old tasks/s "
+          "| new tasks/s | ratio | eff. thr | verdict |")
+    print("|" + "---|" * 11)
+    marker = {"regressed": "**regressed**", "improved": "improved",
+              "neutral": "neutral", "new": "new row",
+              "incomparable": "incomparable"}
+    for r in sorted(cmp["rows"],
+                    key=lambda r: (r["verdict"] != "regressed", r["key"])):
+        kind, model, engine, topo, w, dev, n = r["key"]
+        ratio = f"{r['ratio']:.2f}×" if r["ratio"] is not None else "—"
+        thr = (f"{r['threshold']:.0%}" if r["threshold"] is not None
+               else "—")
+        old_v = f"{r['old']:,.0f}" if r.get("old") else "—"
+        new_v = f"{r['new']:,.0f}" if r.get("new") else "—"
+        print(f"| {kind} | {model} | {engine or '—'} | {topo or '—'} "
+              f"| {w} | {dev or '—'} | {old_v} | {new_v} | {ratio} "
+              f"| {thr} | {marker[r['verdict']]} |")
+    c = cmp["counts"]
+    print(f"\nsummary: {c.get('regressed', 0)} regressed · "
+          f"{c.get('improved', 0)} improved · {c.get('neutral', 0)} "
+          f"neutral · {c.get('new', 0)} new · "
+          f"{cmp['unmatched_old']} baseline rows not re-measured")
+    if cmp["regressed"] and not cmp["warn_only"]:
+        if gate:
+            print("\nGATE: FAIL (regressions above, exit 1)")
+            return 1
+        print("\n(regressions above; pass --gate to make this fail)")
+    elif gate:
+        print("\nGATE: PASS")
+    return 0
+
+
+def compare_main(argv) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(prog="benchmarks.report compare")
+    ap.add_argument("old", help="baseline BENCH json / ledger record")
+    ap.add_argument("new", help="candidate BENCH json / ledger record")
+    ap.add_argument("--threshold", type=float, default=COMPARE_THRESHOLD,
+                    help="relative tasks/s threshold before a verdict "
+                         f"(default {COMPARE_THRESHOLD})")
+    ap.add_argument("--gate", action="store_true",
+                    help="exit nonzero on a non-warn-only regression")
+    a = ap.parse_args(argv)
+    return compare_report(a.old, a.new, a.threshold, a.gate)
+
+
 def main():
+    if len(sys.argv) > 1 and sys.argv[1] == "compare":
+        sys.exit(compare_main(sys.argv[2:]))
     if len(sys.argv) > 1 and sys.argv[1] == "mabs":
         mabs_report(sys.argv[2] if len(sys.argv) > 2 else ".")
         return

@@ -1,4 +1,27 @@
-"""Roofline builder — turns dry-run artifacts into the §Roofline table.
+"""Roofline builders: the LM dry-run table (historic) and the MABS
+engine roofline + T(W, n) cost-model fit (the protocol half).
+
+MABS section (``mabs_roofline_rows`` / ``fit_tn_cost_model``, rendered
+by ``report.py explain BENCH_engine.json``):
+
+  * Per engine row carrying compiled-cost telemetry (the ``cost`` field
+    ``engine_sweep`` captures via ``Engine.compiled_costs``), three
+    bound terms in seconds — compute, memory, collective. XLA's
+    cost_analysis counts ``while`` bodies ONCE, and the engines' wave
+    loops have data-dependent trips, so the per-call FLOPs/bytes are
+    multiplied by the *executed* wave count; the collective term uses
+    the HLO-parsed per-device receive bytes already resolved against the
+    runtime comm ledger (``collective_bytes`` — exact by the cross-check
+    identity). ``max(terms)`` is the roofline bound; measured/bound says
+    how far the engine sits above it.
+  * The fig3-style T(W, n) cost model is fitted against the
+    ``kind:"tn"`` rows: per model, least squares over
+    T ≈ c_sched·n_windows·W² + c_wave·waves + c_task·tasks + c0 —
+    the schedule's O(W²) record check, the per-wave dispatch overhead,
+    the per-task execute work, and a constant. Per-family residuals
+    validate it (closing the ROADMAP item's open fitting half).
+
+LM section (below) — unchanged dry-run roofline.
 
 Three terms per (arch × shape × mesh), in seconds (v5e constants):
 
@@ -147,6 +170,119 @@ def build_table(artifact_dir: str = ARTIFACT_DIR, mesh: str | None = None,
             continue
         rows.append(roofline_row(rec) | {"status": "ok"})
     return rows
+
+
+# --------------------------------------------------------------------------
+# MABS engine roofline + T(W, n) cost-model fit (BENCH_engine.json rows)
+
+#: roofline peaks per backend. TPU: the v5e constants above. CPU: order-
+#: of-magnitude host figures (a few-core AVX box; virtual-device "links"
+#: are memcpys through the same memory system) — the CPU roofline ranks
+#: bound terms and engines against each other, it is not a calibrated
+#: absolute bound.
+MABS_PEAKS = {
+    "tpu": {"flops": PEAK_FLOPS, "mem_bw": HBM_BW, "link_bw": LINK_BW},
+    "cpu": {"flops": 5e10, "mem_bw": 2e10, "link_bw": 1e10},
+}
+
+
+def mabs_roofline_rows(bench: dict) -> list[dict]:
+    """Roofline terms for every engine row carrying compiled-cost
+    telemetry (the ``cost`` field captured by engine_sweep). Per-call
+    cost_analysis FLOPs/bytes count the wave loop's body once, so both
+    scale by the executed wave count; the collective term is the
+    ledger-cross-checked HLO receive-byte total for the whole run."""
+    peaks = MABS_PEAKS.get(bench.get("meta", {}).get("backend", "cpu"),
+                           MABS_PEAKS["cpu"])
+    out = []
+    for r in bench.get("rows", []):
+        c = r.get("cost")
+        if not c or r.get("kind") != "engine":
+            continue
+        waves = max(int(r["total_waves"]), 1)
+        t_comp = c["flops"] * waves / peaks["flops"]
+        t_mem = c["bytes_accessed"] * waves / peaks["mem_bw"]
+        coll = c.get("collective_bytes") or 0
+        t_coll = coll / peaks["link_bw"]
+        terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+        bound = max(terms.values())
+        measured = float(r["seconds"])
+        out.append({
+            "model": r["model"], "engine": r["engine"],
+            "window": r["window"], "n_devices": r["n_devices"],
+            "n_agents": r["n_agents"],
+            "t_compute_s": t_comp, "t_memory_s": t_mem,
+            "t_collective_s": t_coll,
+            "dominant": max(terms, key=terms.get),
+            "bound_s": bound, "measured_s": measured,
+            "above_bound": measured / bound if bound > 0 else float("inf"),
+            "executor": c.get("executor"),
+            "peak_bytes": c.get("peak_bytes"),
+            "coll_ledger_ratio": r.get("coll_ledger_ratio"),
+        })
+    return out
+
+
+#: T(W, n) fit features, in coefficient order (see fit_tn_cost_model)
+TN_FEATURES = ("c_sched[s/W^2]", "c_wave[s/wave]", "c_agent[s/(wave*n)]",
+               "c0[s]")
+
+
+def fit_tn_cost_model(tn_rows: list[dict]) -> list[dict]:
+    """Least-squares fit of the fig3-style T(W, n) cost model against
+    the ``kind:"tn"`` sweep rows, one fit per model:
+
+        T(run) ≈ c_sched · n_windows·W²  (the O(W²) record check)
+               + c_wave  · waves         (per-wave dispatch overhead)
+               + c_agent · waves·n       (per-wave full-state traffic)
+               + c0                      (constant dispatch floor)
+
+    Returns per-model coefficient dicts with overall relative-RMS /
+    R² and per-topology-family residuals — the validation half of the
+    ROADMAP's cost-model item; the future cost-aware scheduler picks W
+    from these coefficients."""
+    import numpy as np
+
+    fits = []
+    for model in sorted({r["model"] for r in tn_rows}):
+        rows = [r for r in tn_rows if r["model"] == model]
+        if len(rows) < len(TN_FEATURES):
+            continue
+        feats, y = [], []
+        for r in rows:
+            n_windows = max(int(r["total_tasks"]) // int(r["window"]), 1)
+            feats.append([n_windows * float(r["window"]) ** 2,
+                          float(r["total_waves"]),
+                          float(r["total_waves"]) * float(r["n_agents"]),
+                          1.0])
+            y.append(float(r["seconds"]))
+        X = np.asarray(feats)
+        y = np.asarray(y)
+        # column scaling for conditioning (W² vs waves·n span ~6 decades)
+        scale = X.max(axis=0)
+        scale[scale == 0] = 1.0
+        coef_s, *_ = np.linalg.lstsq(X / scale, y, rcond=None)
+        coef = coef_s / scale
+        pred = X @ coef
+        resid = y - pred
+        ss_res = float((resid ** 2).sum())
+        ss_tot = float(((y - y.mean()) ** 2).sum()) or 1.0
+        by_family: dict = {}
+        for r, p, yy in zip(rows, pred, y):
+            fam = by_family.setdefault(r["topology"], [])
+            fam.append((yy - p) / yy if yy else 0.0)
+        fits.append({
+            "model": model,
+            "n_rows": len(rows),
+            "coef": dict(zip(TN_FEATURES, (float(c) for c in coef))),
+            "r2": 1.0 - ss_res / ss_tot,
+            "rms_rel": float(np.sqrt(np.mean((resid / y) ** 2))),
+            "residuals_by_family": {
+                fam: {"rms_rel": float(np.sqrt(np.mean(np.square(v)))),
+                      "n": len(v)}
+                for fam, v in sorted(by_family.items())},
+        })
+    return fits
 
 
 def main():

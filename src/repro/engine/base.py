@@ -167,6 +167,38 @@ class WindowedEngine(Engine):
     def _execute(self, state, sched):  # pragma: no cover - abstract
         raise NotImplementedError
 
+    # ------------------------------------------------------ compiled costs
+    def _cost_targets(self, base_key, state):
+        """``(name, jitted_fn, example_args)`` triples for the engine's
+        jit-boundary window executors (the functions ``_execute``
+        dispatches to), lowered AOT by ``compiled_costs``. ``state`` is
+        already prepared (``_prepare_state`` has run, so the sharded
+        executors are built). None = no AOT-lowerable executors (jit
+        disabled, or no hook)."""
+        return None
+
+    def compiled_costs(self, state, *, seed: int = 0):
+        """Compiled-cost telemetry of this engine's window executors:
+        ``{name: repro.obs.costs.ExecutorCost}`` with cost_analysis
+        FLOPs/bytes, the memory decomposition, and the HLO-parsed
+        collective ops (classified by dynamic-loop depth — resolve
+        against executed iteration counts, e.g. the sharded engine's
+        ``comm_iteration_counts``). Lowering compiles but never runs, so
+        ``state`` is not consumed. Returns None for engines/configs with
+        no AOT-lowerable executors; overlapped runs dispatch the pair
+        executors instead of these, so cost capture is barrier-mode only.
+        """
+        if self.overlap:
+            return None
+        from repro.obs.costs import executor_cost
+
+        state = self._prepare_state(state)
+        targets = self._cost_targets(jax.random.key(seed), state)
+        if not targets:
+            return None
+        return {name: executor_cost(fn, *args, name=name)
+                for name, fn, args in targets}
+
     # ------------------------------------------------------------- tracing
     #
     # Every hook below is reached only when a tracer is installed

@@ -414,6 +414,16 @@ class ShardedEngine(WindowedEngine):
             _exec_pair_split = jax.jit(_exec_pair_split, donate_argnums=(0,))
 
         dummy_halo = jnp.full((1,), -1, jnp.int32)
+        # jit-boundary hooks for the compiled-cost telemetry
+        # (repro.obs.costs): which executor a barrier run dispatches to,
+        # and the rung decisions that pick it
+        self._jit_execs = {"mono": _exec_mono, "split": _exec_split,
+                           "pair_mono": _exec_pair_mono,
+                           "pair_split": _exec_pair_split}
+        self._use_halo = use_halo
+        self._use_halo_pair = use_halo_pair
+        self._use_split = use_split
+        self._dummy_halo = dummy_halo
 
         def _execute(state, sched):
             recipes, levels, write_agents, halo, rows = sched
@@ -543,6 +553,32 @@ class ShardedEngine(WindowedEngine):
             stats["window_halo_bytes"] = None
             stats["comm_reduction_vs_window_halo"] = None
         return stats
+
+    # ------------------------------------------------------ compiled costs
+    def _cost_targets(self, base_key, state):
+        if not self._jit:
+            return None
+        recipes, levels, write_agents, halo, rows = self._schedule(
+            base_key, 0, self.window)
+        if self._use_split and rows is not None:
+            return [("execute_split", self._jit_execs["split"],
+                     (state, recipes, levels, write_agents, rows))]
+        h = halo if halo is not None else self._dummy_halo
+        return [("execute_window", self._jit_execs["mono"],
+                 (state, recipes, levels, write_agents, h))]
+
+    def comm_iteration_counts(self, stats: dict) -> dict[int, int]:
+        """Executed dynamic-loop iterations per nesting depth, from the
+        runtime comm ledger of the run that produced ``stats``: depth 1
+        is the wave loop (total executed waves), depth 2 the split rung's
+        chunk loop nested inside it (total chunk gathers = shipped rows /
+        chunk). This is the resolution map for the HLO collectives
+        ``compiled_costs`` parses (their per-iteration bytes × these
+        counts must reproduce ``comm_bytes_total`` — the cross-check)."""
+        chunk_iters = sum(int(r) // self.chunk
+                          for kind, r, _ in self._win_comm
+                          if kind == "split")
+        return {1: int(stats["total_waves"]), 2: chunk_iters}
 
     # ------------------------------------------------------------ tracing
     # Reached only with a tracer installed (repro.obs) — the comm ledger

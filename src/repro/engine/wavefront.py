@@ -35,6 +35,7 @@ class WavefrontEngine(WindowedEngine):
                  jit: bool = True, overlap: bool | None = None):
         super().__init__(model, window=window, strict=strict,
                          overlap=overlap)
+        self._jit = jit
         # deferred so `import repro.engine` works before repro.core's
         # package init has run (core's init imports this module for the
         # WavefrontRunner compat re-export)
@@ -95,6 +96,12 @@ class WavefrontEngine(WindowedEngine):
         # write-owner or halo-row attributes.
         lv = sched[2] if levels is None else levels
         return lv, None, None
+
+    def _cost_targets(self, base_key, state):
+        if not self._jit:
+            return None
+        sched = self._schedule(base_key, 0, self.window)
+        return [("execute_window", self._execute, (state, sched))]
 
 
 @register_engine

@@ -21,9 +21,21 @@ inside*. This package is that layer:
   provenance.py — environment header (jax version, backend, device kind
                   and count, timestamp, git sha) stamped into the
                   benchmark artifacts.
+  costs.py      — compiled-cost telemetry: AOT cost_analysis FLOPs /
+                  bytes, memory decomposition and HLO-parsed per-device
+                  collective traffic of the jitted window executors,
+                  cross-checked against the runtime comm ledger.
 
 See docs/observability.md for the span taxonomy and report walkthrough.
 """
+from repro.obs.costs import (
+    CrossCheck,
+    ExecutorCost,
+    HloCollectives,
+    executor_cost,
+    ledger_cross_check,
+    parse_collectives,
+)
 from repro.obs.provenance import provenance
 from repro.obs.stats import (
     STATS_VERSION,
@@ -50,4 +62,10 @@ __all__ = [
     "registry",
     "row_keys",
     "provenance",
+    "ExecutorCost",
+    "HloCollectives",
+    "CrossCheck",
+    "executor_cost",
+    "parse_collectives",
+    "ledger_cross_check",
 ]

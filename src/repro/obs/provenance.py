@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import datetime
 import os
+import platform
 import subprocess
 
 from repro.obs.stats import STATS_VERSION
@@ -44,4 +45,8 @@ def provenance() -> dict:
                      .isoformat(timespec="seconds"),
         "git_sha": _git_sha(),
         "stats_version": STATS_VERSION,
+        # which box produced the numbers — the compare gate warns on
+        # backend mismatch, but same-backend different-host comparisons
+        # also deserve a visible provenance trail
+        "hostname": platform.node() or None,
     }

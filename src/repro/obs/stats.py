@@ -23,14 +23,16 @@ stay interpretable.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 from typing import Any, Mapping
 
 #: bump on any change to the declared keys or their meaning
-STATS_VERSION = 1
+#: v2: serving group added; non-finite values rejected at the boundary
+STATS_VERSION = 2
 
 #: declaration groups, in rendering order
-GROUPS = ("core", "device", "comm", "overlap")
+GROUPS = ("core", "device", "comm", "overlap", "serving")
 
 
 @dataclass(frozen=True)
@@ -47,10 +49,16 @@ class StatSpec:
             if self.nullable:
                 return None
             raise ValueError(f"stat {self.key!r} is not nullable")
-        if self.kind == "int":
-            return int(value)
-        if self.kind == "float":
-            return float(value)
+        if self.kind in ("int", "float"):
+            # reject NaN/inf at the boundary: a silently-poisoned stat
+            # (0/0 parallelism, overflowed counter) must never reach a
+            # BENCH artifact or the benchmark ledger
+            v = float(value)
+            if not math.isfinite(v):
+                raise ValueError(
+                    f"stat {self.key!r} is non-finite ({v!r}) — refusing "
+                    "to record it")
+            return int(value) if self.kind == "int" else v
         if self.kind == "bool":
             return bool(value)
         if self.kind == "mapping":
@@ -169,3 +177,12 @@ declare("carry_frontier_mean", "float", "overlap",
         nullable=True)
 declare("carry_frontier_max", "int", "overlap",
         "largest carry floor seen", nullable=True)
+
+# serving — the continuous-batching engine (repro/serving/engine.py);
+# its waves are protocol iterations, so the core keys apply unchanged
+declare("serving_prefill_tasks", "int", "serving",
+        "prefill-chunk tasks executed", nullable=True)
+declare("serving_decode_tasks", "int", "serving",
+        "decode-step tasks executed (batched per wave)", nullable=True)
+declare("serving_requests_finished", "int", "serving",
+        "requests completed (EOS or max_new_tokens)", nullable=True)

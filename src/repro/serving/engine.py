@@ -35,6 +35,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.records import prefix_conflicts, wave_levels
+from repro.obs.profiler import annotate
+from repro.obs.stats import finalize_stats
+from repro.obs.trace import current_tracer
 
 
 @dataclass
@@ -75,8 +78,14 @@ class ServingEngine:
         self.finished: list[Request] = []
         self.iterations = 0
         self.wave_sizes: list[int] = []
+        self.prefill_tasks = 0
+        self.decode_tasks = 0
 
-        self._decode = jax.jit(model.decode_step)
+        def _decode_step(params, last, states):
+            with annotate("protocol.decode_wave"):
+                return model.decode_step(params, last, states)
+
+        self._decode = jax.jit(_decode_step)
         self._prefill_chunk_fns: dict[int, object] = {}
 
     # ------------------------------------------------------------ admit
@@ -172,8 +181,14 @@ class ServingEngine:
         if key not in self._prefill_chunk_fns:
             import functools
 
-            self._prefill_chunk_fns[key] = jax.jit(functools.partial(
-                self.model.prefill, chunked=True, include_prefix=first))
+            prefill = functools.partial(
+                self.model.prefill, chunked=True, include_prefix=first)
+
+            def _prefill_chunk(params, batch, states, _fn=prefill):
+                with annotate("protocol.prefill_chunk"):
+                    return _fn(params, batch, states)
+
+            self._prefill_chunk_fns[key] = jax.jit(_prefill_chunk)
         logits, slot_states = self._prefill_chunk_fns[key](
             self.params, batch, slot_states)
         self._scatter_state(slot_states, task["slot"])
@@ -233,26 +248,79 @@ class ServingEngine:
 
     # ------------------------------------------------------------- run
     def step(self) -> bool:
-        """One protocol iteration. Returns False when fully idle."""
-        self._admit()
-        window = self._build_window()
-        wave = self._schedule_wave(window)
+        """One protocol iteration. Returns False when fully idle.
+
+        With a span tracer installed (``repro.obs.tracing()``) each
+        iteration emits a fenced ``schedule`` span (admit + window build
+        + wave-0 selection) and an ``execute`` span (prefill chunks +
+        the batched decode wave) — the same taxonomy the batch engines
+        use, so serving traces render through ``report.py trace``. The
+        untraced path is guarded by one ``current_tracer()`` check."""
+        tr = current_tracer()
+        if tr is None:
+            self._admit()
+            wave = self._schedule_wave(self._build_window())
+        else:
+            with tr.span("schedule", index=self.iterations):
+                self._admit()
+                wave = self._schedule_wave(self._build_window())
         if not wave:
             return bool(self.queue or self.active)
         self.wave_sizes.append(len(wave))
         prefills = [t for t in wave if t["kind"] == 0]
         decodes = [t for t in wave if t["kind"] == 1]
+        if tr is None:
+            self._exec_wave(prefills, decodes)
+        else:
+            with tr.span("execute", index=self.iterations,
+                         prefills=len(prefills), decodes=len(decodes)) as sp:
+                self._exec_wave(prefills, decodes)
+                jax.block_until_ready(self.states)
+                sp.args["wave"] = len(prefills) + len(decodes)
+        self.prefill_tasks += len(prefills)
+        self.decode_tasks += len(decodes)
+        self.iterations += 1
+        return True
+
+    def _exec_wave(self, prefills, decodes):
         for t in prefills:
             self._exec_prefill(t)
         if decodes:
             self._exec_decode_wave(decodes)
-        self.iterations += 1
-        return True
 
     def run(self, max_iterations: int = 100_000):
-        it = 0
-        while self.step():
-            it += 1
-            if it > max_iterations:
-                raise RuntimeError("engine did not converge")
+        tr = current_tracer()
+        if tr is None:
+            it = 0
+            while self.step():
+                it += 1
+                if it > max_iterations:
+                    raise RuntimeError("engine did not converge")
+            return self.finished
+        with tr.span("run", engine="serving", window=self.n_slots,
+                     total_tasks=0) as sp:
+            it = 0
+            while self.step():
+                it += 1
+                if it > max_iterations:
+                    raise RuntimeError("engine did not converge")
+            jax.block_until_ready(self.states)
+            sp.args["total_tasks"] = self.prefill_tasks + self.decode_tasks
         return self.finished
+
+    def run_stats(self) -> dict:
+        """Engine-run statistics through the same typed registry boundary
+        as every batch engine (``repro.obs.stats.finalize_stats``): the
+        core keys map one iteration -> one window with one executed wave,
+        plus the serving-group task/request counters."""
+        waves = self.wave_sizes
+        total = self.prefill_tasks + self.decode_tasks
+        return finalize_stats({
+            "total_tasks": total,
+            "n_windows": self.iterations,
+            "total_waves": len(waves),
+            "mean_parallelism": total / max(len(waves), 1),
+            "serving_prefill_tasks": self.prefill_tasks,
+            "serving_decode_tasks": self.decode_tasks,
+            "serving_requests_finished": len(self.finished),
+        })

@@ -1,5 +1,5 @@
 from repro.utils.pytree import tree_bytes, tree_param_count, tree_map_with_path_str
-from repro.utils.timing import Timer, median_time
+from repro.utils.timing import Timer, TimingResult, median_time
 
 __all__ = [
     "tree_bytes",
@@ -7,4 +7,5 @@ __all__ = [
     "tree_map_with_path_str",
     "Timer",
     "median_time",
+    "TimingResult",
 ]

@@ -32,9 +32,42 @@ def block_all(out):
     return out
 
 
+class TimingResult(float):
+    """The median seconds, behaving as a bare float everywhere — plus
+    the full fenced per-repeat sample list (sorted ascending) for
+    dispersion-aware consumers: the benchmark ledger and ``report.py
+    compare`` widen their regression thresholds by the observed spread
+    instead of trusting a bare median."""
+
+    __slots__ = ("samples",)
+
+    samples: tuple
+
+    def __new__(cls, median: float, samples):
+        self = super().__new__(cls, median)
+        self.samples = tuple(float(s) for s in samples)
+        return self
+
+    @property
+    def min_s(self) -> float:
+        return self.samples[0]
+
+    @property
+    def rel_spread(self) -> float:
+        """(max - min) / median over the repeats — 0.0 for a single
+        repeat; the dispersion the compare thresholds widen by."""
+        med = float(self)
+        if not med or len(self.samples) < 2:
+            return 0.0
+        return (self.samples[-1] - self.samples[0]) / med
+
+
 def median_time(fn: Callable[[], object], repeats: int = 5,
-                warmup: int = 2) -> float:
+                warmup: int = 2) -> TimingResult:
     """Median wall time of ``fn()`` in seconds, fenced per repeat.
+    Returns a ``TimingResult`` — a float subclass carrying the sorted
+    per-repeat ``samples`` — so every existing float consumer is
+    untouched while dispersion-aware callers get the full list.
 
     Warmup policy: ``warmup`` untimed calls run first and are fully
     fenced (``block_all`` on their outputs). The default of 2 covers the
@@ -59,4 +92,4 @@ def median_time(fn: Callable[[], object], repeats: int = 5,
         block_all(fn())
         times.append(time.perf_counter() - t0)
     times.sort()
-    return times[len(times) // 2]
+    return TimingResult(times[len(times) // 2], times)
